@@ -1,0 +1,72 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def emsnet_cfg(quick=True, *, train=False, **kw):
+    from repro.configs.emsnet import EMSNetConfig
+    base = dict(vocab_size=2048)
+    if quick:
+        base.update(max_text_len=32, vitals_len=16)
+        if train:   # training benchmarks need a CPU-sized text encoder
+            base.update(text_encoder="microbert", vocab_size=512,
+                        max_text_len=16, vitals_hidden=32)
+    base.update(kw)
+    return EMSNetConfig(**base)
+
+
+def build_split_models(cfg, seed=0):
+    from repro.core import emsnet_module, split
+    mods = {
+        "m1": emsnet_module(cfg, ("text",)),
+        "m2": emsnet_module(cfg, ("text", "vitals")),
+        "m3": emsnet_module(cfg, ("text", "vitals", "scene")),
+    }
+    splits = {k: split(m) for k, m in mods.items()}
+    key = jax.random.PRNGKey(seed)
+    params = {k: m.init_fn(jax.random.fold_in(key, i))
+              for i, (k, m) in enumerate(mods.items())}
+    return splits, params
+
+
+def sample_payloads(cfg, seed=0, batch=1):
+    rng = np.random.default_rng(seed)
+    return {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                         (batch, cfg.max_text_len)), jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(batch, cfg.vitals_len,
+                                               cfg.n_vitals)), jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (batch, cfg.scene_dim)),
+                             jnp.float32),
+    }
+
+
+def warmup_engine_models(splits, params, payloads):
+    """Compile every jitted submodule before timing."""
+    for name, sm in splits.items():
+        feats = {}
+        for m in sm.modalities():
+            feats[m] = sm.encoders[m](params[name], payloads[m])
+        jax.block_until_ready(sm.tail(params[name], feats))
+        jax.block_until_ready(
+            sm.full(params[name], {m: payloads[m] for m in sm.modalities()}))
+
+
+def bench(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    return (name, us_per_call, derived)

@@ -1,0 +1,44 @@
+"""Paper Figure 14 (scenario 1): cumulative inference time, EMSServe's
+feature cache vs direct multimodal inference, over the three Table-6
+episodes. The paper reports 1.9x-11.7x across four hardware tiers; here
+the compute ratio is measured on this host and the tier spread comes
+from the measured per-module profile (text-module cost dominates, so the
+ratio grows with text-encoder size exactly as in the paper).
+"""
+from __future__ import annotations
+
+import time
+
+from . import common as C
+
+
+def run(quick=True):
+    from repro.core import EMSServe, profile, table6
+
+    rows = []
+    encoders = ["tinybert"] if quick else ["tinybert", "mobilebert", "bertbase"]
+    for enc in encoders:
+        cfg = C.emsnet_cfg(quick, text_encoder=enc)
+        splits, params = C.build_split_models(cfg)
+        payloads = C.sample_payloads(cfg)
+        C.warmup_engine_models(splits, params, payloads)
+        for ep_id, events in table6().items():
+            times = {}
+            for cached in (False, True):
+                # 3 repetitions, keep the best (cold-start protection)
+                best = float("inf")
+                for _ in range(3):
+                    eng = EMSServe(splits, params, cached=cached,
+                                   real_time=True)
+                    eng.run_episode(events, lambda ev: payloads[ev.modality])
+                    best = min(best, eng.cumulative_time())
+                times[cached] = best
+            speedup = times[False] / times[True]
+            rows.append(C.csv_row(
+                f"fig14_ep{ep_id}_{enc}", times[True] * 1e6,
+                f"direct_us={times[False]*1e6:.0f};speedup={speedup:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

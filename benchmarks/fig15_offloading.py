@@ -1,0 +1,67 @@
+"""Paper Figure 15: edge-assisted offloading.
+
+Scenario 2 (static NLOS distances 0-30 m): cumulative episode latency
+when offloading vs on-glass, per distance. Scenario 3 (mobility): the
+EMT walks 0->30->0 m; adaptive offloading vs always-offload vs
+always-on-glass. Latencies combine the measured per-module profile
+(scaled to the paper's tiers) with the NLOS bandwidth model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common as C
+
+
+def _policy(base, trace, **kw):
+    from repro.core import AdaptiveOffloadPolicy, HeartbeatMonitor, ProfileTable
+    return AdaptiveOffloadPolicy(ProfileTable(base=base),
+                                 HeartbeatMonitor(trace), **kw)
+
+
+def run(quick=True):
+    from repro.core import BandwidthTrace, EMSServe, nlos_bandwidth, profile, table6
+
+    cfg = C.emsnet_cfg(quick, text_encoder="tinybert")
+    splits, params = C.build_split_models(cfg)
+    payloads = C.sample_payloads(cfg)
+    C.warmup_engine_models(splits, params, payloads)
+    base = profile(splits["m3"], params["m3"], payloads, iters=3)
+    events = table6()[1]
+    rows = []
+
+    # scenario 2: static distances
+    for dist in (0, 5, 10, 20, 30):
+        trace = BandwidthTrace.static(nlos_bandwidth(dist))
+        res = {}
+        for force in ("edge", "glass", None):
+            eng = EMSServe(splits, params,
+                           policy=_policy(base, trace, force=force),
+                           cached=True)
+            eng.run_episode(events, lambda ev: payloads[ev.modality])
+            res[force or "adaptive"] = eng.cumulative_time()
+        rows.append(C.csv_row(
+            f"fig15_static_{dist}m", res["adaptive"] * 1e6,
+            f"edge={res['edge']*1e3:.1f}ms;glass={res['glass']*1e3:.1f}ms"))
+        assert res["adaptive"] <= min(res["edge"], res["glass"]) * 1.05
+
+    # scenario 3: walking 0 -> 30 -> 0 m
+    dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 10))
+    trace = BandwidthTrace.walk(dist, nlos_bandwidth)
+    res = {}
+    for name, kw in (("adaptive", {}), ("always_edge", {"force": "edge"}),
+                     ("always_glass", {"force": "glass"})):
+        eng = EMSServe(splits, params, policy=_policy(base, trace, **kw),
+                       cached=True)
+        eng.run_episode(events, lambda ev: payloads[ev.modality])
+        res[name] = eng.cumulative_time()
+    rows.append(C.csv_row(
+        "fig15_mobility", res["adaptive"] * 1e6,
+        f"always_edge={res['always_edge']*1e3:.1f}ms;"
+        f"always_glass={res['always_glass']*1e3:.1f}ms"))
+    assert res["adaptive"] <= min(res["always_edge"], res["always_glass"]) * 1.05
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

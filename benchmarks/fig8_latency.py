@@ -1,0 +1,39 @@
+"""Paper Figure 8: per-component inference time across hardware tiers.
+
+Base times are measured on this host; the four tiers (Edge-64X, Edge-4C,
+PH1, Google Glass) are derived with the paper's measured slowdown
+factors, reproducing the profile table that drives offloading decisions.
+Also verifies the paper's structural findings: text modules dominate,
+vitals modules are orders of magnitude cheaper than text.
+"""
+from __future__ import annotations
+
+from . import common as C
+
+
+def run(quick=True):
+    from repro.core import profile
+    from repro.core.offload import TIER_FACTORS, ProfileTable
+
+    rows = []
+    text_encoders = ["tinybert"] if quick else ["tinybert", "mobilebert"]
+    for enc in text_encoders:
+        for venc in (("gru",) if quick else ("rnn", "gru", "lstm")):
+            cfg = C.emsnet_cfg(quick, text_encoder=enc, vitals_encoder=venc)
+            splits, params = C.build_split_models(cfg)
+            payloads = C.sample_payloads(cfg)
+            base = profile(splits["m3"], params["m3"], payloads, iters=5)
+            table = ProfileTable(base=base)
+            for sub, t in base.items():
+                tiers = ";".join(
+                    f"{tier}={table.time(sub, tier)*1e3:.2f}ms"
+                    for tier in TIER_FACTORS)
+                rows.append(C.csv_row(f"fig8_{enc}-{venc}_{sub}", t * 1e6, tiers))
+            # structural claims
+            assert base["enc:text"] > 5 * base["enc:vitals"], \
+                "text module must dominate vitals (paper Insight 2)"
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

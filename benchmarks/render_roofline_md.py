@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+Replaces the <!-- ROOFLINE_BASELINE --> / <!-- ROOFLINE_TUNED --> markers.
+  PYTHONPATH=src python -m benchmarks.render_roofline_md
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+EXP = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(v):
+    return f"{v:.3g}"
+
+
+def table(tuned: bool) -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | bound | useful | strategy |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = {}
+    for p in ART.glob("*.json"):
+        r = json.loads(p.read_text())
+        if not r.get("ok") or r["mesh"] != "single":
+            continue
+        if bool(r.get("tuned")) != tuned:
+            continue
+        key = (r["arch"], r["shape"])
+        if key in recs:   # several tuned variants: keep the best bound
+            def bound(x):
+                ro = x["roofline"]
+                return max(ro["t_compute_s"], ro["t_memory_s"],
+                           ro["t_collective_s"])
+            if bound(r) >= bound(recs[key]):
+                continue
+        recs[key] = r
+    for (arch, shape) in sorted(recs, key=lambda k: (k[0], SHAPE_ORDER.index(k[1]))):
+        r = recs[(arch, shape)]
+        ro = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {fmt(ro['t_compute_s'])} s | "
+            f"{fmt(ro['t_memory_s'])} s | {fmt(ro['t_collective_s'])} s | "
+            f"{ro['bottleneck']} | {ro['useful_flops_ratio']:.2f} | "
+            f"{r.get('strategy', '2d')} |")
+    return "\n".join(rows)
+
+
+def main():
+    text = EXP.read_text()
+    text = re.sub(r"<!-- ROOFLINE_BASELINE -->(\n\|[^\n]*)*",
+                  "<!-- ROOFLINE_BASELINE -->\n" + table(False), text)
+    text = re.sub(r"<!-- ROOFLINE_TUNED -->(\n\|[^\n]*)*",
+                  "<!-- ROOFLINE_TUNED -->\n" + table(True), text)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md roofline tables updated "
+          f"({len(table(False).splitlines())-2} baseline rows, "
+          f"{len(table(True).splitlines())-2} tuned rows)")
+
+
+if __name__ == "__main__":
+    main()

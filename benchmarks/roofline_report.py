@@ -1,0 +1,50 @@
+"""Roofline report (deliverable g): the full per-(arch x shape x mesh)
+table from the dry-run artifacts — three roofline terms, dominant
+bottleneck, useful-FLOPs ratio, bytes/device.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import common as C
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(mesh="single"):
+    recs = []
+    for p in sorted(ART.glob(f"*_{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def run(quick=True, mesh="single"):
+    rows = []
+    if not ART.exists():
+        print("roofline_report,0,no-artifacts (run repro.launch.dryrun --all)")
+        return rows
+    recs = load(mesh)
+    for r in recs:
+        roof = r["roofline"]
+        dom = roof["bottleneck"]
+        t_step = max(roof["t_compute_s"], roof["t_memory_s"],
+                     roof["t_collective_s"])
+        hbm_gb = (r.get("argument_size_in_bytes", 0)
+                  + r.get("output_size_in_bytes", 0)
+                  + r.get("temp_size_in_bytes", 0)) / 2**30
+        rows.append(C.csv_row(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            t_step * 1e6,
+            f"bottleneck={dom};tc={roof['t_compute_s']:.3g};"
+            f"tm={roof['t_memory_s']:.3g};tcoll={roof['t_collective_s']:.3g};"
+            f"useful={roof['useful_flops_ratio']:.3f};"
+            f"mem_gb_per_dev={hbm_gb:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False, mesh="single")
+    run(quick=False, mesh="multi")

@@ -1,0 +1,57 @@
+"""Paper Table 5: end-to-end accuracy with modality-frontend noise.
+
+The paper shows that plugging in real speech recognition (Whisper-s/m,
+WER ~0.05) and object detection (YOLO11, mAP ~0.8) barely moves EMSNet's
+end-to-end accuracy vs ground-truth inputs. We reproduce that with the
+stub frontends: corrupt text tokens at the measured WER and flip scene
+flags at the measured detector error rate, then compare.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import common as C
+from .table3_accuracy import _fmt
+
+
+def corrupt(te, cfg, *, wer=0.056, det_err=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    ds = te.subset(np.arange(len(te)))
+    mask = (ds.text > 0) & (rng.random(ds.text.shape) < wer)
+    noise = rng.integers(5, cfg.vocab_size, ds.text.shape).astype(ds.text.dtype)
+    ds.text[mask] = noise[mask]
+    flip = rng.random(ds.scene.shape) < det_err
+    ds.scene[flip] = 1.0 - ds.scene[flip]
+    return ds
+
+
+def run(quick=True):
+    from repro.data import synthetic_nemsis as D
+    from repro.training import emsnet_trainer as ET
+
+    cfg = C.emsnet_cfg(quick, train=True)
+    n = 2000 if quick else 8000
+    steps = 150 if quick else 500
+    d2 = D.generate(cfg, n, seed=7, modal3=True)
+    tr, _, te = D.splits(d2)
+    mods = ("text", "vitals", "scene")
+    params, _ = ET.train(cfg, D.loader(tr, 64), modalities=mods, steps=steps)
+
+    rows = []
+    m_truth = ET.evaluate(params, cfg, te, mods)
+    rows.append(C.csv_row("table5_truth_inputs", 0.0, _fmt(m_truth)))
+    for name, wer, derr in (("whisper_s_yolo11n", 0.056, 0.2),
+                            ("whisper_t_glass", 0.315, 0.2)):
+        m = ET.evaluate(params, cfg, corrupt(te, cfg, wer=wer, det_err=derr),
+                        mods)
+        rows.append(C.csv_row(f"table5_{name}", 0.0, _fmt(m)))
+        if wer < 0.1:
+            # paper: accurate frontends don't degrade E2E accuracy
+            assert m["protocol_top1"] > m_truth["protocol_top1"] - 0.08
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

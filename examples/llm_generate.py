@@ -1,0 +1,50 @@
+"""Prefix-cached LLM serving across the architecture zoo.
+
+The paper's feature cache, applied to autoregressive state: requests
+that extend an already-served prompt reuse the stored decode cache (KV
+ring buffer / MLA latent / SSM state) instead of re-encoding the prefix.
+Runs reduced variants of three different cache families on CPU.
+
+  PYTHONPATH=src python examples/llm_generate.py [--arch rwkv6-1.6b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as T
+from repro.serving.engine import LLMServer, Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default=None,
+                help="single arch id; default runs three cache families")
+args = ap.parse_args()
+
+archs = [args.arch] if args.arch else \
+    ["mistral-nemo-12b", "rwkv6-1.6b", "deepseek-v3-671b"]
+
+for arch in archs:
+    cfg = reduced(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    srv = LLMServer(cfg, params, cache_len=96)
+
+    system_prompt = np.arange(1, 33, dtype=np.int32)     # shared prefix
+    users = [np.array([40 + i, 50 + i], np.int32) for i in range(4)]
+
+    t0 = time.perf_counter()
+    srv.serve_one(Request("warm", system_prompt, max_new_tokens=1))
+    results = [srv.serve_one(Request(f"u{i}",
+                                     np.concatenate([system_prompt, u]),
+                                     max_new_tokens=8))
+               for i, u in enumerate(users)]
+    dt = time.perf_counter() - t0
+
+    hits = sum(r.prefix_hit for r in results)
+    encoded = sum(r.prefill_tokens for r in results)
+    naive = sum(len(system_prompt) + len(u) for u in users)
+    print(f"{arch:22s} ({cfg.arch_type:6s}): {hits}/4 prefix hits, "
+          f"encoded {encoded} vs {naive} prompt tokens "
+          f"({naive/max(encoded,1):.1f}x fewer), {dt:.2f}s, "
+          f"first completion: {results[0].tokens[:6].tolist()}")

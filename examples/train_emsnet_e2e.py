@@ -1,0 +1,22 @@
+"""End-to-end training driver (deliverable b): train EMSNet on the
+synthetic NEMSIS-schema dataset for a few hundred steps — D1 2-modal
+pretraining then PMI 3-modal integration — evaluate all three tasks,
+checkpoint, and serve the result through EMSServe.
+
+With ``--text-encoder bertbase`` the backbone is the paper's ~110M
+configuration (slow on CPU); the default tinybert is the paper's
+on-device pick.
+
+  PYTHONPATH=src python examples/train_emsnet_e2e.py --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch import train as launcher
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--model") for a in argv):
+        argv = ["--model", "emsnet", "--out", "checkpoints/emsnet"] + argv
+    sys.argv = [sys.argv[0]] + argv
+    launcher.main()

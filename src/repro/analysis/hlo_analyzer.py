@@ -1,0 +1,200 @@
+"""Loop-aware analysis of compiled (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` does NOT multiply through ``while`` bodies,
+so any scan-over-layers model (i.e. every model here) is undercounted by
+the layer count. This walker parses the HLO text into its computation
+graph, extracts per-op contributions, and resolves ENTRY totals
+recursively with while-loop trip counts (XLA annotates
+``known_trip_count`` on scan-derived loops; a constant-scan of the
+condition computation is the fallback).
+
+Per-op contributions:
+  * flops: ``dot`` ops — 2 x numel(result) x contracted size (operand
+    shapes resolved from the computation-local symbol table);
+  * collective bytes by kind: result-buffer bytes of all-reduce /
+    all-gather / reduce-scatter / all-to-all / collective-permute
+    (per-device, post-partitioning);
+  * hbm bytes: result bytes of materializing ops (parameters, tuples,
+    GTEs, bitcasts and constants excluded) — a fused-kernel-granularity
+    traffic estimate.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z0-9\-]+)\((.*)$")
+_PARAM_SIG_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*([0-9]+)')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                  "constant", "after-all", "custom-call"}
+
+
+def _shape_info(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + [(dtype, dims)] for a (possibly tuple) shape string."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, d))
+    return total, shapes
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_text: str
+    rest: str                       # operands + attrs (rest of the line)
+
+    @property
+    def result_bytes(self):
+        return _shape_info(self.result_text)[0]
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> shape text
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+    coll_count: Dict[str, float] = field(default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                for pname, pshape in _PARAM_SIG_RE.findall(m.group(2)):
+                    cur.symbols[pname] = pshape
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, result, opcode, rest = m.groups()
+            cur.symbols[name] = result
+            cur.ops.append(Op(name, opcode, result, rest))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    """2 * numel(result) * contracted-dims size (from lhs operand shape)."""
+    rbytes, rshapes = _shape_info(op.result_text)
+    if not rshapes:
+        return 0.0
+    numel = 1
+    for d in rshapes[0][1]:
+        numel *= d
+    m = re.match(r"\s*%?([\w.\-]+)", op.rest)
+    contracted = 1
+    if m:
+        lhs_shape = comp.symbols.get(m.group(1), "")
+        _, lshapes = _shape_info(lhs_shape)
+        cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        if lshapes and cd:
+            dims = [int(x) for x in cd.group(1).split(",") if x]
+            for d in dims:
+                if d < len(lshapes[0][1]):
+                    contracted *= lshapes[0][1][d]
+    return 2.0 * numel * contracted
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> float:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return float(m.group(1))
+    m = _COND_RE.search(op.rest)
+    if m and m.group(1) in comps:
+        consts = []
+        for o in comps[m.group(1)].ops:
+            if o.opcode == "constant":
+                cm = re.match(r"\s*(\d+)\s*\)", o.rest)
+                if cm:
+                    consts.append(int(cm.group(1)))
+            consts.extend(int(c) for c in _CONST_RE.findall(o.rest))
+        if consts:
+            return float(max(consts))
+    return 1.0
+
+
+def _resolve(comp: Computation, comps, memo) -> Totals:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Totals()          # cycle guard
+    t = Totals()
+    for op in comp.ops:
+        if op.opcode == "dot":
+            t.flops += _dot_flops(comp, op)
+        if op.opcode in COLLECTIVES or any(
+                op.opcode == c + "-start" for c in COLLECTIVES):
+            kind = op.opcode.replace("-start", "")
+            t.coll[kind] += op.result_bytes
+            t.coll_count[kind] += 1
+        if op.opcode not in SKIP_BYTES_OPS:
+            t.bytes += op.result_bytes
+        # recurse into called computations
+        mult = 1.0
+        if op.opcode == "while":
+            mult = _trip_count(op, comps)
+        for callee in _CALL_RE.findall(op.rest):
+            if callee in comps:
+                t.add(_resolve(comps[callee], comps, memo), mult)
+    memo[comp.name] = t
+    return t
+
+
+def analyze_hlo(hlo: str) -> Totals:
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else None
+    if entry is None:
+        return Totals()
+    return _resolve(comps[entry], comps, {})

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get_config(arch_id)`` and ``ARCHS``."""
+from __future__ import annotations
+
+from . import (codeqwen15_7b, deepseek_v3_671b, emsnet, jamba_v01_52b,
+               llama32_vision_11b, mistral_nemo_12b, musicgen_large,
+               nemotron_4_15b, olmoe_1b_7b, qwen15_32b, rwkv6_1b6)
+from .base import SHAPES, InputShape, LayerSpec, MambaConfig, MLAConfig, ModelConfig, reduced
+
+_REGISTRY = {
+    "deepseek-v3-671b": deepseek_v3_671b.config,
+    "nemotron-4-15b": nemotron_4_15b.config,
+    "codeqwen1.5-7b": codeqwen15_7b.config,
+    "musicgen-large": musicgen_large.config,
+    "llama-3.2-vision-11b": llama32_vision_11b.config,
+    "qwen1.5-32b": qwen15_32b.config,
+    "rwkv6-1.6b": rwkv6_1b6.config,
+    "jamba-v0.1-52b": jamba_v01_52b.config,
+    "mistral-nemo-12b": mistral_nemo_12b.config,
+    "olmoe-1b-7b": olmoe_1b_7b.config,
+}
+
+ARCHS = tuple(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return _REGISTRY[name]()
+
+
+def get_emsnet_config(**kw):
+    return emsnet.config(**kw)
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "InputShape", "LayerSpec", "MambaConfig", "MLAConfig",
+    "ModelConfig", "get_config", "get_emsnet_config", "reduced",
+]

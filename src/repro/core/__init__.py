@@ -1,0 +1,10 @@
+"""The paper's primary contribution: EMSServe — modality-aware model
+splitting, per-modality feature caching, and adaptive edge offloading
+for asynchronously-arriving multimodal EMS data."""
+from .engine import EMSServe, EventRecord  # noqa: F401
+from .episodes import Event, random_episode, table6  # noqa: F401
+from .feature_cache import FeatureCache, StalenessError  # noqa: F401
+from .modular import MultimodalModule, emsnet_module  # noqa: F401
+from .offload import (AdaptiveOffloadPolicy, BandwidthTrace,  # noqa: F401
+                      HeartbeatMonitor, ProfileTable, nlos_bandwidth)
+from .splitter import SplitModel, profile, split  # noqa: F401

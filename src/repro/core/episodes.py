@@ -1,0 +1,49 @@
+"""EMS episodes: asynchronously-arriving multimodal data sequences.
+
+Table 6 of the paper, verbatim (S = speech/text, V = vitals, I = image/
+scene), plus a seeded random-episode generator. Episode 1 is the
+canonical Fig.-1 arrival order; 2 and 3 are its shuffles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+_MAP = {"S": "text", "V": "vitals", "I": "scene"}
+
+EPISODE_1 = "S V V V V V V V V V V I I I I I I I I I I"
+EPISODE_2 = "I V I V I V I S V I V I I V V I V V I V I"
+EPISODE_3 = "V V V V V V I I I I I I V I V V I I S V I"
+
+
+@dataclass(frozen=True)
+class Event:
+    index: int
+    modality: str              # text | vitals | scene
+    arrival_time: float        # seconds since episode start
+
+
+def parse(seq: str, *, inter_arrival: float = 1.0) -> List[Event]:
+    toks = seq.split()
+    return [Event(i, _MAP[t], i * inter_arrival) for i, t in enumerate(toks)]
+
+
+def table6(inter_arrival: float = 1.0):
+    return {
+        1: parse(EPISODE_1, inter_arrival=inter_arrival),
+        2: parse(EPISODE_2, inter_arrival=inter_arrival),
+        3: parse(EPISODE_3, inter_arrival=inter_arrival),
+    }
+
+
+def random_episode(n_events: int, seed: int, *, inter_arrival: float = 1.0,
+                   p=(0.05, 0.5, 0.45)) -> List[Event]:
+    """One speech event (paper: a single symptom description) plus a
+    random mix of vitals/images — NEMSIS records up to 30 vitals/event."""
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice(["text", "vitals", "scene"], size=n_events, p=p).tolist()
+    if "text" not in kinds:
+        kinds[rng.integers(n_events)] = "text"
+    return [Event(i, k, i * inter_arrival) for i, k in enumerate(kinds)]

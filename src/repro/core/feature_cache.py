@@ -1,0 +1,89 @@
+"""Versioned per-(session, modality) feature cache (EMSServe's key idea).
+
+Invariants (paper §4.2.3, fault tolerance):
+  * an entry is stamped with the engine step that produced it; the
+    engine asserts entries it consumes are never staler than one step
+    ("the cache on the smart glasses is never outdated by more than one
+    step" — the edge returns the cache with every result);
+  * entries carry the tier that computed them, so the fault-tolerance
+    path can tell which features survive an edge crash.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclass
+class CacheEntry:
+    feature: Any               # device array (B, d_m)
+    step: int                  # engine step that produced it
+    tier: str                  # 'glass' | 'edge'
+    modality: str
+    version: int = 0
+
+
+class StalenessError(RuntimeError):
+    pass
+
+
+class FeatureCache:
+    def __init__(self, max_staleness: int = 1):
+        self.max_staleness = max_staleness
+        self._store: Dict[Tuple[str, str], CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, session: str, modality: str, feature, *, step: int,
+            tier: str = "glass"):
+        key = (session, modality)
+        prev = self._store.get(key)
+        self._store[key] = CacheEntry(
+            feature=feature, step=step, tier=tier, modality=modality,
+            version=(prev.version + 1) if prev else 0)
+
+    def get(self, session: str, modality: str, *,
+            input_step: Optional[int] = None):
+        """``input_step``: the engine step at which this modality's
+        aggregated input last changed. A cache entry must have been
+        computed no more than ``max_staleness`` steps before that —
+        the paper's "never outdated by more than one step" invariant
+        (the slack covers an edge crash mid-recompute)."""
+        entry = self._store.get((session, modality))
+        if entry is None:
+            self.misses += 1
+            return None
+        if input_step is not None and input_step - entry.step > self.max_staleness:
+            raise StalenessError(
+                f"cache for {modality} lags its input by "
+                f"{input_step - entry.step} steps (max {self.max_staleness}) "
+                "— fault-tolerance invariant broken")
+        self.hits += 1
+        return entry
+
+    def features(self, session: str, modalities, *, input_steps=None):
+        """Dict of cached features for the given modalities (None if any missing)."""
+        out = {}
+        for m in modalities:
+            e = self.get(session, m,
+                         input_step=(input_steps or {}).get(m))
+            if e is None:
+                return None
+            out[m] = e.feature
+        return out
+
+    def touch(self, session: str, modality: str, step: int):
+        """Re-stamp an entry (edge returned it alongside a result)."""
+        e = self._store.get((session, modality))
+        if e is not None:
+            e.step = step
+
+    def drop_tier(self, tier: str):
+        """Invalidate entries held only by a crashed tier."""
+        self._store = {k: v for k, v in self._store.items() if v.tier != tier}
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def __len__(self):
+        return len(self._store)

@@ -1,0 +1,56 @@
+"""MultimodalModule protocol: the contract the modality-aware splitter
+operates on.
+
+A multimodal multitask model is declared as named per-modality encoder
+functions plus a fused tail (fusion + task heads), each a pure function
+over its own parameter subtree. EMSNet is the paper's instance; any
+model with a decomposable front (e.g. a VLM's vision cross-KV encoder)
+fits the same protocol.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Sequence
+
+
+@dataclass(frozen=True)
+class MultimodalModule:
+    name: str
+    modalities: tuple                          # ordering defines fusion concat
+    encoder_fns: Dict[str, Callable]           # m -> fn(params, inputs) -> feature
+    tail_fn: Callable                          # fn(params, {m: feature}) -> outputs
+    init_fn: Callable                          # fn(key) -> params
+    # representative input sizes in bytes, used by the offloading policy
+    payload_bytes: Dict[str, int] = field(default_factory=dict)
+
+    def full_fn(self):
+        """The monolithic forward — what a conventional framework runs."""
+        def fn(params, batch):
+            feats = {m: self.encoder_fns[m](params, batch[m])
+                     for m in self.modalities}
+            return self.tail_fn(params, feats)
+        return fn
+
+
+def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModule:
+    """Wrap EMSNet into the protocol."""
+    import jax
+    from repro.models import emsnet as E
+
+    def enc(m):
+        return lambda params, inputs: E.encode(params, cfg, m, inputs)
+
+    payload = {
+        "text": 16000 * 30,        # ~order of a short speech clip (bytes)
+        "vitals": cfg.vitals_len * cfg.n_vitals * 4,
+        "scene": 640 * 480 * 3,    # a scene image
+    }
+    return MultimodalModule(
+        name=f"emsnet-{cfg.text_encoder}-{cfg.vitals_encoder}-fc",
+        modalities=tuple(modalities),
+        encoder_fns={m: enc(m) for m in modalities},
+        tail_fn=lambda params, feats: E.fuse_and_heads(
+            params["heads"], feats, modalities),
+        init_fn=lambda key: E.init_params(cfg, key, modalities),
+        payload_bytes={m: payload[m] for m in modalities},
+    )

@@ -1,0 +1,68 @@
+"""Modality-aware model splitter (EMSServe §4.2.1).
+
+Decomposes a MultimodalModule into independently-jitted single-modality
+callables plus a fused tail. In the PyTorch original this is an offline
+graph-surgery step on module objects; in JAX the split boundary is a
+pytree of features, so each piece is its own XLA program — which is
+exactly what lets EMSServe (a) run one modality the moment it arrives,
+(b) cache its output feature, and (c) place each piece on a different
+tier.
+
+``split`` also returns the monolithic jitted forward — the "direct
+PyTorch" baseline the paper compares against.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict
+
+import jax
+
+from .modular import MultimodalModule
+
+
+@dataclass
+class SplitModel:
+    module: MultimodalModule
+    encoders: Dict[str, Callable]     # jitted per-modality: (params, x) -> feature
+    tail: Callable                    # jitted: (params, feats) -> outputs
+    full: Callable                    # jitted monolithic forward (baseline)
+
+    def modalities(self):
+        return self.module.modalities
+
+
+def split(module: MultimodalModule, *, jit: bool = True) -> SplitModel:
+    wrap = jax.jit if jit else (lambda f: f)
+    encoders = {m: wrap(fn) for m, fn in module.encoder_fns.items()}
+    tail = wrap(module.tail_fn)
+    full = wrap(module.full_fn())
+    return SplitModel(module=module, encoders=encoders, tail=tail, full=full)
+
+
+def profile(split_model: SplitModel, params, sample_batch: dict,
+            *, iters: int = 5) -> Dict[str, float]:
+    """One-time offline inference-time profiling (EMSServe §4.2.2).
+
+    Returns wall-seconds per submodule (and the monolithic model) on
+    *this* host — the `t^e` column; tier tables derive `t^g` from it.
+    """
+    times = {}
+
+    def bench(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)             # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    feats = {}
+    for m in split_model.modalities():
+        times[f"enc:{m}"] = bench(split_model.encoders[m], params, sample_batch[m])
+        feats[m] = split_model.encoders[m](params, sample_batch[m])
+    times["tail"] = bench(split_model.tail, params, feats)
+    times["full"] = bench(split_model.full, params, sample_batch)
+    return times

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python); on TPU the same calls lower to
+Mosaic. ``REPRO_PALLAS_INTERPRET=0`` switches to compiled mode.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import rwkv6 as _rw
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") is not None:
+        return os.environ["REPRO_PALLAS_INTERPRET"] not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, block_t=64, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rw.rwkv6_scan(r, k, v, w, u, s0, block_t=block_t,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, kbuf, vbuf, slot_pos, t, *, window=0, block_k=256,
+                     interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _da.decode_attention(q, kbuf, vbuf, slot_pos, t, window=window,
+                                block_k=block_k, interpret=interpret)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (fully materialized, O(S^2))."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Materialized softmax."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, Dv = v.shape
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq if causal else 0)
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential RWKV6 recurrence oracle.
+
+    r/k/v/w: (B, S, H, n) f32, u: (H, n), s0: (B, H, n, n).
+    Returns (y (B,S,H,n), final_state)."""
+    B, S, H, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, n, n), jnp.float32)
+    f32 = lambda a: a.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    tm = lambda a: jnp.moveaxis(f32(a), 1, 0)
+    s, ys = jax.lax.scan(step, f32(s0), (tm(r), tm(k), tm(v), tm(w)))
+    return jnp.moveaxis(ys, 0, 1), s

@@ -1,0 +1,94 @@
+"""EMSServe serving launcher: run Table-6 episodes through the engine
+with adaptive offloading, feature caching, and (optionally) an edge
+crash, printing the per-event trace.
+
+  PYTHONPATH=src python -m repro.launch.serve --episode 1 --mobility
+  PYTHONPATH=src python -m repro.launch.serve --episode 2 --no-cache
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_models(cfg):
+    from repro.core import emsnet_module, split
+    mods = {
+        "m1": emsnet_module(cfg, ("text",)),
+        "m2": emsnet_module(cfg, ("text", "vitals")),
+        "m3": emsnet_module(cfg, ("text", "vitals", "scene")),
+    }
+    splits = {k: split(m) for k, m in mods.items()}
+    key = jax.random.PRNGKey(0)
+    params = {k: m.init_fn(jax.random.fold_in(key, i))
+              for i, (k, m) in enumerate(mods.items())}
+    return splits, params
+
+
+def sample_payloads(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                         (1, cfg.max_text_len)), jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, cfg.vitals_len,
+                                               cfg.n_vitals)), jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episode", type=int, default=1, choices=[1, 2, 3])
+    ap.add_argument("--text-encoder", default="tinybert")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--mobility", action="store_true",
+                    help="walk 0->30->0 m during the episode (scenario 3)")
+    ap.add_argument("--crash-edge-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    from repro.configs.emsnet import config as emsnet_config
+    from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, EMSServe,
+                            HeartbeatMonitor, ProfileTable, nlos_bandwidth,
+                            profile, table6)
+
+    cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
+    splits, params = build_models(cfg)
+    payloads = sample_payloads(cfg)
+
+    base = profile(splits["m3"], params["m3"], payloads)
+    base["full"] = base["full"]
+    table = ProfileTable(base=base)
+    if args.mobility:
+        dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
+        trace = BandwidthTrace.walk(dist, nlos_bandwidth, period=1.0)
+    else:
+        trace = BandwidthTrace.static(nlos_bandwidth(5.0))
+    policy = AdaptiveOffloadPolicy(table, HeartbeatMonitor(trace))
+
+    engine = EMSServe(splits, params, policy=policy,
+                      cached=not args.no_cache)
+    events = table6()[args.episode]
+    for i, ev in enumerate(events):
+        if i == args.crash_edge_at:
+            print("!! edge server crash — failing over to on-glass inference")
+            engine.crash_edge()
+        rec = engine.on_event(ev, payloads[ev.modality])
+        top = ""
+        if rec.recommendation is not None:
+            p = int(jnp.argmax(rec.recommendation["protocol_logits"]))
+            m = int(jnp.argmax(rec.recommendation["medicine_logits"]))
+            q = float(rec.recommendation["quantity"][0])
+            top = f" -> protocol={p} medicine={m} qty={q:+.2f}"
+        print(f"[{ev.index:2d}] {ev.modality:6s} tier={rec.tier:5s} "
+              f"dt={rec.delta_t*1e3:7.2f}ms compute={rec.compute_s*1e3:7.2f}ms "
+              f"cum={rec.cumulative_s*1e3:8.2f}ms{top}")
+    print(f"\ncumulative serving time: {engine.cumulative_time()*1e3:.1f} ms "
+          f"(cache hits: {engine.cache.hits})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) combination.
+
+``input_specs(cfg, shape, policy)`` returns (fn, args) where ``fn`` is
+the step function to lower and ``args`` is a pytree of ShapeDtypeStructs
+carrying NamedShardings — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.sharding import Policy
+from repro.models import transformer as T
+from repro.serving.kv_cache import cache_plan
+from repro.training import optimizer as OPT
+from repro.training.trainer import make_train_step
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(policy: Policy, pspecs, tree):
+    return jax.tree.map(
+        lambda leaf, spec: _sds(leaf.shape, leaf.dtype,
+                                NamedSharding(policy.mesh, spec)),
+        tree, pspecs)
+
+
+def abstract_params(cfg: ModelConfig, policy: Policy):
+    aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+    return _with_shardings(policy, policy.param_pspecs(aparams), aparams)
+
+
+def token_batch(cfg: ModelConfig, shape: InputShape, policy: Policy,
+                *, labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    tshape = (B, S) if cfg.n_codebooks == 1 else (B, S, cfg.n_codebooks)
+    batch = {"tokens": jax.ShapeDtypeStruct(tshape, jnp.int32)}
+    if labels:
+        batch["labels"] = jax.ShapeDtypeStruct(tshape, jnp.int32)
+    if cfg.cond_dim:
+        batch["cond"] = jax.ShapeDtypeStruct(
+            (B, cfg.cond_seq_len, cfg.cond_dim), jnp.bfloat16)
+    return _with_shardings(policy, policy.batch_pspecs(batch), batch)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, policy: Policy):
+    """Returns (step_fn, args_tuple) ready for jax.jit(step_fn).lower(*args)."""
+    params = abstract_params(cfg, policy)
+
+    if shape.kind == "train":
+        def constrain_grads(grads):
+            pspecs = policy.param_pspecs(grads)
+            return jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(policy.mesh, s)),
+                grads, pspecs)
+        moe_a2a = None
+        if (policy.tuned and policy.strategy == "fsdp" and cfg.n_experts):
+            expert_axes = (("data", "model") if policy.experts_2d
+                           else ("model",))
+            moe_a2a = {"mesh": policy.mesh, "token_axes": policy.dp,
+                       "expert_axes": expert_axes}
+        step, opt_init = make_train_step(cfg, constrain=policy.constrain,
+                                         constrain_grads=constrain_grads,
+                                         moe_a2a=moe_a2a)
+        aopt = jax.eval_shape(opt_init, params)
+        opt = _with_shardings(policy, policy.opt_pspecs(params, aopt), aopt)
+        batch = token_batch(cfg, shape, policy, labels=True)
+        return step, (params, opt, batch)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return T.prefill(params, cfg, batch["tokens"],
+                             cond=batch.get("cond"),
+                             constrain=policy.constrain)
+        batch = token_batch(cfg, shape, policy, labels=False)
+        return prefill_step, (params, batch)
+
+    if shape.kind == "decode":
+        cache_len, window = cache_plan(cfg, shape)
+        long = shape.name == "long_500k"
+
+        moe_pre = None
+        if policy.tuned and cfg.n_experts:
+            from jax.sharding import PartitionSpec as P
+
+            def moe_pre(h):
+                return jax.lax.with_sharding_constraint(
+                    h, NamedSharding(policy.mesh, P(*(None,) * h.ndim)))
+
+        def serve_step(params, cache, tokens, t):
+            return T.decode_step(params, cfg, tokens, cache, t,
+                                 window_attn=window, moe_pre=moe_pre)
+
+        acache = jax.eval_shape(
+            partial(T.init_cache, cfg, shape.global_batch, cache_len))
+        cache = _with_shardings(policy, policy.cache_pspecs(acache, long=long),
+                                acache)
+        B = shape.global_batch
+        tshape = (B, 1) if cfg.n_codebooks == 1 else (B, 1, cfg.n_codebooks)
+        tokens = _with_shardings(
+            policy, policy.batch_spec(jax.ShapeDtypeStruct(tshape, jnp.int32)),
+            jax.ShapeDtypeStruct(tshape, jnp.int32))
+        t = jax.ShapeDtypeStruct((), jnp.int32)
+        return serve_step, (params, cache, tokens, t)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,3 @@
+from . import attention, layers, moe, rwkv, ssm, transformer  # noqa: F401
+from .transformer import (decode_step, forward_train, init_cache,  # noqa: F401
+                          init_params, prefill)

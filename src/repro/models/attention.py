@@ -1,0 +1,327 @@
+"""Attention: GQA, MLA (DeepSeek), cross-attention, sliding windows.
+
+Prefill/train attention uses a *blocked online-softmax* (flash-style)
+implementation in pure jnp — ``flash_attention_jnp`` — so the lowered
+HLO never materializes an (Sq, Sk) score matrix. This is also the
+reference algorithm mirrored by the Pallas kernel in
+``repro.kernels.flash_attention``.
+
+Decode paths operate on fixed-size ring-buffer caches: a slot is valid
+iff its stored position is in [t - window, t] (window = buffer size for
+full-attention caches), which makes the same code serve both the full
+`decode_32k` cache and the sliding-window `long_500k` cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Blocked flash attention (pure jnp)
+# ----------------------------------------------------------------------
+
+def _chunk(x, n, axis):
+    shape = list(x.shape)
+    shape[axis:axis + 1] = [n, shape[axis] // n]
+    x = x.reshape(shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, window=0, scale=None,
+                        q_positions=None, kv_positions=None,
+                        q_chunk=512, kv_chunk=512):
+    """Blocked attention with online softmax.
+
+    q: (B, Sq, H, Dq); k: (B, Sk, KV, Dq); v: (B, Sk, KV, Dv).
+    GQA handled by grouping H into KV groups. Returns (B, Sq, H, Dv).
+    ``window`` > 0 masks keys older than window positions. Positions
+    default to aligned arange (self-attention).
+    """
+    B, Sq, H, Dq = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dq)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq if causal else 0)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk, dtype=jnp.int32)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    # pad to divisible chunk sizes (padded kv slots get position -1 -> masked)
+    pq = (-Sq) % qc
+    pk = (-Sk) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pq), constant_values=2**30)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pk), constant_values=-1)
+    nq, nk = (Sq + pq) // qc, (Sk + pk) // kc
+
+    qg = q.reshape(B, nq, qc, KV, G, Dq)
+    qs = jnp.moveaxis(qg, 1, 0)                       # (nq, B, qc, KV, G, Dq)
+    ks = _chunk(k, nk, 1)                             # (nk, B, kc, KV, Dq)
+    vs = _chunk(v, nk, 1)                             # (nk, B, kc, KV, Dv)
+    qpos = q_positions.reshape(nq, qc)
+    kpos = kv_positions.reshape(nk, kc)
+
+    def q_body(_, q_in):
+        qi, qp = q_in                                  # (B,qc,KV,G,Dq), (qc,)
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            kj, vj, kp = kv_in
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            mask = kp[None, :] >= 0
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,G,qc,Dv)
+        return None, jnp.moveaxis(out, 3, 1)           # (B,qc,KV,G,Dv)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qpos))    # (nq,B,qc,KV,G,Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq + pq, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def plain_attention_vs_cache(q, kbuf, vbuf, slot_pos, t, *, window, scale):
+    """One-token decode against a ring-buffer cache.
+
+    q: (B, 1, H, D); kbuf/vbuf: (B, W, KV, D); slot_pos: (W,) int32
+    positions stored per slot (-1 = never written); t: scalar current pos.
+    """
+    B, _, H, Dq = q.shape
+    KV = kbuf.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dq)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   kbuf.astype(jnp.float32)) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= t)
+    if window:
+        valid &= t - slot_pos < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, vbuf.astype(jnp.float32))
+    return out.reshape(B, 1, H, vbuf.shape[-1]).astype(q.dtype)
+
+
+def ring_write(buf, new, t):
+    """Write ``new`` (B, 1, ...) at slot t % W of ``buf`` (B, W, ...)."""
+    W = buf.shape[1]
+    slot = jnp.mod(t, W)
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), slot, axis=1)
+
+
+# ----------------------------------------------------------------------
+# GQA self-attention / cross-attention module
+# ----------------------------------------------------------------------
+
+def attn_init(key, cfg, *, cross=False, kv_src_dim=None):
+    d = cfg.d_model
+    src = kv_src_dim if kv_src_dim is not None else d
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    bias = cfg.qkv_bias and not cross
+    return {
+        "wq": L.dense_init(ks[0], d, cfg.q_dim, bias=bias, dtype=dt),
+        "wk": L.dense_init(ks[1], src, cfg.kv_dim, bias=bias, dtype=dt),
+        "wv": L.dense_init(ks[2], src, cfg.kv_dim, bias=bias, dtype=dt),
+        "wo": L.dense_init(ks[3], cfg.q_dim, d, dtype=dt),
+    }
+
+
+def attn_forward(p, x, positions, cfg, *, window=0, kernel="jnp"):
+    """Training/prefill self-attention. Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, H, D)
+    k = L.dense(p["wk"], x).reshape(B, S, KV, D)
+    v = L.dense(p["wv"], x).reshape(B, S, KV, D)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if kernel == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        out = flash_attention_jnp(q, k, v, causal=True, window=window)
+    return L.dense(p["wo"], out.reshape(B, S, H * D)), (k, v)
+
+
+def attn_decode(p, x, cache, t, cfg, *, window=0):
+    """One-token decode. x: (B, 1, d). cache: {k, v, pos}. Returns out, cache."""
+    B = x.shape[0]
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    tpos = jnp.full((B, 1), t, jnp.int32)
+    q = L.dense(p["wq"], x).reshape(B, 1, H, D)
+    k = L.dense(p["wk"], x).reshape(B, 1, KV, D)
+    v = L.dense(p["wv"], x).reshape(B, 1, KV, D)
+    q = L.apply_rope(q, tpos, cfg.rope_theta)
+    k = L.apply_rope(k, tpos, cfg.rope_theta)
+    kbuf = ring_write(cache["k"], k, t)
+    vbuf = ring_write(cache["v"], v, t)
+    W = kbuf.shape[1]
+    pos = cache["pos"].at[jnp.mod(t, W)].set(t)
+    out = plain_attention_vs_cache(q, kbuf, vbuf, pos, t,
+                                   window=window, scale=1.0 / math.sqrt(D))
+    out = L.dense(p["wo"], out.reshape(B, 1, H * D))
+    return out, {"k": kbuf, "v": vbuf, "pos": pos}
+
+
+def cross_attn_forward(p, x, cond_kv, cfg, *, kernel="jnp"):
+    """Cross-attention over conditioning features.
+
+    cond_kv: precomputed (k, v) each (B, Cs, KV, D) — the cacheable
+    modality feature (paper's F_I analogue).
+    """
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, H, D)
+    k, v = cond_kv
+    out = flash_attention_jnp(q, k, v, causal=False)
+    return L.dense(p["wo"], out.reshape(B, S, H * D))
+
+
+def cross_kv(p, cond, cfg):
+    """Project conditioning embeddings to (k, v) once — cached thereafter."""
+    B, Cs, _ = cond.shape
+    KV, D = cfg.n_kv_heads, cfg.head_dim
+    k = L.dense(p["wk"], cond).reshape(B, Cs, KV, D)
+    v = L.dense(p["wv"], cond).reshape(B, Cs, KV, D)
+    return k, v
+
+
+def attn_cache_init(cfg, batch, length, dtype):
+    KV, D = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, KV, D), dtype),
+        "v": jnp.zeros((batch, length, KV, D), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ----------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": L.dense_init(ks[0], d, m.q_lora_rank, dtype=dt),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank, dt),
+        "wq_b": L.dense_init(ks[1], m.q_lora_rank,
+                             H * (m.qk_nope_dim + m.qk_rope_dim), dtype=dt),
+        "wkv_a": L.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype=dt),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dt),
+        "wk_b": L.dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_dim, dtype=dt),
+        "wv_b": L.dense_init(ks[4], m.kv_lora_rank, H * m.v_dim, dtype=dt),
+        "wo": L.dense_init(ks[5], H * m.v_dim, d, dtype=dt),
+    }
+
+
+def _mla_q(p, x, positions, cfg):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q = L.dense(p["wq_b"], L.rmsnorm(p["q_norm"], L.dense(p["wq_a"], x)))
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, positions, cfg):
+    m = cfg.mla
+    kv = L.dense(p["wkv_a"], x)
+    ckv = L.rmsnorm(p["kv_norm"], kv[..., :m.kv_lora_rank])
+    k_rope = L.apply_rope(kv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return ckv, k_rope
+
+
+def mla_forward(p, x, positions, cfg, *, window=0, kernel="jnp"):
+    """Train/prefill: decompress latents and run MHA. Returns out, (ckv, k_rope)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    ckv, k_rope = _mla_ckv(p, x, positions, cfg)
+    wk_b = p["wk_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    wv_b = p["wv_b"]["w"].reshape(m.kv_lora_rank, H, m.v_dim)
+    k_nope = jnp.einsum("bsr,rhn->bshn", ckv, wk_b)
+    vdec = jnp.einsum("bsr,rhv->bshv", ckv, wv_b)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, S, H, m.qk_rope_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = flash_attention_jnp(q, k, vdec, causal=True, window=window, scale=scale)
+    out = L.dense(p["wo"], out.reshape(B, S, H * m.v_dim))
+    return out, (ckv, k_rope)
+
+
+def mla_decode(p, x, cache, t, cfg, *, window=0):
+    """Absorbed-matrix decode against the latent cache (the serving-efficient
+    form: scores and context computed directly in the kv_lora latent space)."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    tpos = jnp.full((B, 1), t, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, tpos, cfg)           # (B,1,H,*)
+    ckv_new, krope_new = _mla_ckv(p, x, tpos, cfg)     # (B,1,r), (B,1,p)
+    cbuf = ring_write(cache["ckv"], ckv_new, t)
+    rbuf = ring_write(cache["krope"], krope_new, t)
+    W = cbuf.shape[1]
+    pos = cache["pos"].at[jnp.mod(t, W)].set(t)
+
+    wk_b = p["wk_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    wv_b = p["wv_b"]["w"].reshape(m.kv_lora_rank, H, m.v_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_lat, cbuf.astype(jnp.float32))
+         + jnp.einsum("bqhp,bkp->bhqk", q_rope.astype(jnp.float32),
+                      rbuf.astype(jnp.float32)))
+    s *= 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    valid = (pos >= 0) & (pos <= t)
+    if window:
+        valid &= t - pos < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", w, cbuf.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, wv_b.astype(jnp.float32))
+    out = L.dense(p["wo"], out.reshape(B, 1, H * m.v_dim).astype(x.dtype))
+    return out, {"ckv": cbuf, "krope": rbuf, "pos": pos}
+
+
+def mla_cache_init(cfg, batch, length, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, length, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, length, m.qk_rope_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }

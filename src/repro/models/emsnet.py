@@ -1,0 +1,207 @@
+"""EMSNet: the paper's multimodal multitask model, in JAX.
+
+Three backbone encoders (paper Table 1):
+  * text:   TinyBERT / MobileBERT / BERTBase — bidirectional transformer
+            over symptom-sentence tokens, masked mean-pooled to F_T.
+  * vitals: RNN / LSTM / GRU over the (T, 6) time series -> F_V.
+  * scene:  FC over the object-detection one-hot -> F_I.
+Feature concatenation F_C = [F_T ; F_V ; F_I] (the fusion the paper
+selected over dot-product/weighted-sum/attention), then three headers:
+protocol (46-way), medicine type (18-way), quantity (regression).
+Tasks 4/5 (dosage via med-math, disease history via dictionary) are
+deterministic post-processing in ``repro.core.medmath``.
+
+Every encoder is an independent pure function over its own parameter
+subtree — exactly the property EMSServe's modality-aware splitter
+exploits.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.emsnet import EMSNetConfig
+from . import layers as L
+
+
+# ----------------------------------------------------------------------
+# Text encoder (BERT-class, bidirectional)
+# ----------------------------------------------------------------------
+
+def _block_init(key, d, heads, ff):
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": L.layernorm_init(d),
+        "wqkv": L.dense_init(ks[0], d, 3 * d, bias=True),
+        "wo": L.dense_init(ks[1], d, d, bias=True),
+        "ln2": L.layernorm_init(d),
+        "w1": L.dense_init(ks[2], d, ff, bias=True),
+        "w2": L.dense_init(ks[3], ff, d, bias=True),
+    }
+
+
+def text_encoder_init(key, cfg: EMSNetConfig):
+    n_layers, d, heads, ff = cfg.text_dims
+    ks = jax.random.split(key, n_layers + 3)
+    return {
+        "tok": L.embedding_init(ks[0], cfg.vocab_size, d),
+        "pos": L.embedding_init(ks[1], cfg.max_text_len, d),
+        "ln": L.layernorm_init(d),
+        "blocks": [_block_init(ks[2 + i], d, heads, ff) for i in range(n_layers)],
+    }
+
+
+def _bert_block(p, x, mask, heads):
+    B, S, d = x.shape
+    hd = d // heads
+    h = L.layernorm(p["ln1"], x)
+    qkv = L.dense(p["wqkv"], h).reshape(B, S, 3, heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, d)
+    x = x + L.dense(p["wo"], att)
+    h = L.layernorm(p["ln2"], x)
+    x = x + L.dense(p["w2"], jax.nn.gelu(L.dense(p["w1"], h)))
+    return x
+
+
+def text_encoder(p, cfg: EMSNetConfig, tokens):
+    """tokens: (B, S) int32, 0 = PAD. Returns F_T (B, d_text)."""
+    _, d, heads, _ = cfg.text_dims
+    mask = tokens > 0
+    S = tokens.shape[1]
+    x = L.embed(p["tok"], tokens) + p["pos"]["emb"][None, :S]
+    for blk in p["blocks"]:
+        x = _bert_block(blk, x, mask, heads)
+    x = L.layernorm(p["ln"], x)
+    m = mask[..., None].astype(x.dtype)
+    return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+
+
+# ----------------------------------------------------------------------
+# Vitals encoder (RNN / LSTM / GRU)
+# ----------------------------------------------------------------------
+
+def vitals_encoder_init(key, cfg: EMSNetConfig):
+    d_in, h = cfg.n_vitals, cfg.vitals_hidden
+    ks = jax.random.split(key, 3)
+    gates = {"rnn": 1, "gru": 3, "lstm": 4}[cfg.vitals_encoder]
+    return {
+        "wx": L.dense_init(ks[0], d_in, gates * h, bias=True),
+        "wh": L.dense_init(ks[1], h, gates * h),
+    }
+
+
+def vitals_encoder(p, cfg: EMSNetConfig, vitals):
+    """vitals: (B, T, n_vitals) float. Returns F_V (B, vitals_hidden)."""
+    B, T, _ = vitals.shape
+    h = cfg.vitals_hidden
+    kind = cfg.vitals_encoder
+    x_proj = L.dense(p["wx"], vitals)               # (B, T, gates*h)
+
+    def rnn_step(hc, xt):
+        hp = hc
+        out = jnp.tanh(xt + hp @ p["wh"]["w"])
+        return out, None
+
+    def gru_step(hc, xt):
+        hp = hc
+        zr = xt + hp @ p["wh"]["w"]
+        z = jax.nn.sigmoid(zr[:, :h])
+        r = jax.nn.sigmoid(zr[:, h:2 * h])
+        n = jnp.tanh(xt[:, 2 * h:] + (r * hp) @ p["wh"]["w"][:, 2 * h:])
+        out = (1 - z) * n + z * hp
+        return out, None
+
+    def lstm_step(carry, xt):
+        hp, cp = carry
+        g = xt + hp @ p["wh"]["w"]
+        i = jax.nn.sigmoid(g[:, :h])
+        f = jax.nn.sigmoid(g[:, h:2 * h] + 1.0)
+        o = jax.nn.sigmoid(g[:, 2 * h:3 * h])
+        c = f * cp + i * jnp.tanh(g[:, 3 * h:])
+        return (o * jnp.tanh(c), c), None
+
+    xs = jnp.moveaxis(x_proj, 1, 0)                  # (T, B, gates*h)
+    h0 = jnp.zeros((B, h), vitals.dtype)
+    if kind == "lstm":
+        (hT, _), _ = jax.lax.scan(lstm_step, (h0, h0), xs)
+    elif kind == "gru":
+        hT, _ = jax.lax.scan(gru_step, h0, xs)
+    else:
+        hT, _ = jax.lax.scan(rnn_step, h0, xs)
+    return hT
+
+
+# ----------------------------------------------------------------------
+# Scene encoder + headers
+# ----------------------------------------------------------------------
+
+def scene_encoder_init(key, cfg: EMSNetConfig):
+    return {"fc": L.dense_init(key, cfg.scene_dim, cfg.scene_hidden, bias=True)}
+
+
+def scene_encoder(p, cfg: EMSNetConfig, scene):
+    """scene: (B, scene_dim) one-hot-ish floats. Returns F_I."""
+    return jax.nn.relu(L.dense(p["fc"], scene))
+
+
+def heads_init(key, cfg: EMSNetConfig, modalities):
+    dims = cfg.feature_dims
+    fc_dim = sum(dims[m] for m in modalities)
+    ks = jax.random.split(key, 3)
+    return {
+        "protocol": L.dense_init(ks[0], fc_dim, cfg.n_protocols, bias=True),
+        "medicine": L.dense_init(ks[1], fc_dim, cfg.n_medicines, bias=True),
+        "quantity": L.dense_init(ks[2], fc_dim, 1, bias=True),
+    }
+
+
+def fuse_and_heads(p, features: dict, modalities):
+    """Concatenate per-modality features (paper's fusion) and run headers."""
+    fc = jnp.concatenate([features[m] for m in modalities], axis=-1)
+    return {
+        "protocol_logits": L.dense(p["protocol"], fc),
+        "medicine_logits": L.dense(p["medicine"], fc),
+        "quantity": L.dense(p["quantity"], fc)[..., 0],
+    }
+
+
+# ----------------------------------------------------------------------
+# Whole model
+# ----------------------------------------------------------------------
+
+ENCODERS = {
+    "text": (text_encoder_init, text_encoder),
+    "vitals": (vitals_encoder_init, vitals_encoder),
+    "scene": (scene_encoder_init, scene_encoder),
+}
+
+
+def init_params(cfg: EMSNetConfig, key, modalities=("text", "vitals", "scene")):
+    ks = jax.random.split(key, len(modalities) + 1)
+    p = {m: ENCODERS[m][0](ks[i], cfg) for i, m in enumerate(modalities)}
+    p["heads"] = heads_init(ks[-1], cfg, modalities)
+    return p
+
+
+def encode(params, cfg: EMSNetConfig, modality: str, inputs):
+    return ENCODERS[modality][1](params[modality], cfg, inputs)
+
+
+def forward(params, cfg: EMSNetConfig, batch: dict,
+            modalities=("text", "vitals", "scene"), *, freeze=()):
+    """Full multimodal forward. batch keys = modality names."""
+    feats = {}
+    for m in modalities:
+        f = encode(params, cfg, m, batch[m])
+        if m in freeze:
+            f = jax.lax.stop_gradient(f)
+        feats[m] = f
+    return fuse_and_heads(params["heads"], feats, modalities)

@@ -1,0 +1,115 @@
+"""Primitive layers: init helpers, norms, RoPE, MLPs, embeddings.
+
+Parameters are plain dict pytrees; every function here is pure and
+jit/pjit friendly. Weights are stored in ``cfg.dtype`` (bf16 for the
+full-size dry-run configs, f32 for CPU smoke tests); all math is done in
+f32 accumulation where it matters (norms, softmax, rope).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))            # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                   # (..., S, H, D): broadcast over H
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"gate": dense_init(ks[0], d, ff, dtype=dtype),
+                "up": dense_init(ks[1], d, ff, dtype=dtype),
+                "down": dense_init(ks[2], ff, d, dtype=dtype)}
+    if act == "relu2":
+        return {"up": dense_init(ks[0], d, ff, dtype=dtype),
+                "down": dense_init(ks[1], ff, d, dtype=dtype)}
+    raise ValueError(act)
+
+
+def mlp(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(dense(p["up"], x)))
+    else:
+        raise ValueError(act)
+    return dense(p["down"], h)

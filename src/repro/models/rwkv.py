@@ -1,0 +1,142 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The time-mix recurrence per head (head dim n):
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t          (S: n x n state)
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora(x_t))) — the data-dependent decay that
+distinguishes v6 from v5. Trained with a lax.scan over time; decode is
+one recurrence step. The constant-size state is the arch's "feature
+cache": long_500k decode touches no sequence-length buffers at all.
+
+A Pallas TPU kernel for the chunked form lives in
+``repro.kernels.rwkv6``; this module is its jnp reference.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def rwkv6_init(key, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    scale = 1.0 / math.sqrt(d)
+
+    def mat(k, a, b, s=scale):
+        return (jax.random.normal(k, (a, b), jnp.float32) * s).astype(dt)
+
+    # decay init: spread across heads/channels (v6 style)
+    decay = jnp.linspace(-6.0, -1.0, d, dtype=jnp.float32)
+    return {
+        "mu": jnp.full((5, d), 0.5, dt),          # token-shift mix for r,k,v,w,g
+        "wr": mat(ks[0], d, d), "wk": mat(ks[1], d, d),
+        "wv": mat(ks[2], d, d), "wg": mat(ks[3], d, d),
+        "wo": mat(ks[4], d, d),
+        "w0": decay,                               # (d,)
+        "w_lora_a": mat(ks[5], d, 64, 0.01),
+        "w_lora_b": mat(ks[6], 64, d, 0.01),
+        "u": (jax.random.normal(ks[7], (H, hd), jnp.float32) * 0.1),
+        "ln_x": L.layernorm_init(hd, jnp.float32),  # per-head group norm
+    }
+
+
+def _tmix_projections(p, x, x_prev, cfg):
+    """x: (B, S, d); x_prev: previous-token x (token shift)."""
+    H = cfg.d_model // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    B, S, d = x.shape
+    mu = p["mu"].astype(jnp.float32)
+    xf, xpf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+
+    def mix(i):
+        return (xf + (xpf - xf) * mu[i]).astype(x.dtype)
+
+    r = (mix(0) @ p["wr"]).reshape(B, S, H, hd)
+    k = (mix(1) @ p["wk"]).reshape(B, S, H, hd)
+    v = (mix(2) @ p["wv"]).reshape(B, S, H, hd)
+    wx = mix(3)
+    lora = jnp.tanh(wx @ p["w_lora_a"].astype(wx.dtype)) @ p["w_lora_b"].astype(wx.dtype)
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))   # (B,S,d) in (0,1)
+    w = w.reshape(B, S, H, hd)
+    g = jax.nn.silu((mix(4) @ p["wg"])).reshape(B, S, H, hd)
+    return r, k, v, w, g
+
+
+def _wkv_scan(r, k, v, w, u, S0):
+    """Recurrence. r/k/v/w: (B, S, H, n) f32; u: (H, n); S0: (B, H, n, n)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                               # (B,H,n)
+        kv = k_t[..., :, None] * v_t[..., None, :]             # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    S, ys = jax.lax.scan(step, S0, (tm(r), tm(k), tm(v), tm(w)))
+    return S, jnp.moveaxis(ys, 0, 1)                           # (B,S,H,n)
+
+
+def rwkv6_tmix(p, x, cfg, *, state=None, x_prev=None):
+    """Time-mix. Returns (out, (last_x, state))."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), x.dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    r, k, v, w, g = _tmix_projections(p, x, shifted, cfg)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    f32 = lambda a: a.astype(jnp.float32)
+    state, y = _wkv_scan(f32(r), f32(k), f32(v), f32(w), p["u"], state)
+    y = L.layernorm(p["ln_x"], y)                               # per-head norm
+    y = (y * g.astype(jnp.float32)).reshape(B, S, d).astype(x.dtype)
+    out = y @ p["wo"]
+    return out, (x[:, -1:, :], state)
+
+
+def cmix_init(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "mu": jnp.full((2, d), 0.5, dt),
+        "wk": (jax.random.normal(ks[0], (d, ff), jnp.float32) * s).astype(dt),
+        "wv": (jax.random.normal(ks[1], (ff, d), jnp.float32)
+               * (1.0 / math.sqrt(ff))).astype(dt),
+        "wr": (jax.random.normal(ks[2], (d, d), jnp.float32) * s).astype(dt),
+    }
+
+
+def rwkv6_cmix(p, x, cfg, *, x_prev=None):
+    """Channel-mix (relu^2). Returns (out, last_x)."""
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), x.dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xpf = x.astype(jnp.float32), shifted.astype(jnp.float32)
+    xk = (xf + (xpf - xf) * mu[0]).astype(x.dtype)
+    xr = (xf + (xpf - xf) * mu[1]).astype(x.dtype)
+    kv = jnp.square(jax.nn.relu(xk @ p["wk"])) @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    return out, x[:, -1:, :]
+
+
+def rwkv6_cache_init(cfg, batch, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "tshift": jnp.zeros((batch, 1, d), dtype),
+        "cshift": jnp.zeros((batch, 1, d), dtype),
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,129 @@
+"""Mamba-1 selective-SSM block (Jamba's recurrent mixer).
+
+The selective scan runs as a ``lax.scan`` over time with per-step
+discretization (dA, dBx computed inside the body) so the lowered HLO
+never materializes the (B, S, d_inner, d_state) tensors — only the
+(B, d_inner, d_state) carry lives across steps. Decode is a single
+recurrence step against a (conv_state, ssm_state) cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def dt_rank(cfg) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    m = cfg.mamba
+    di, st, dc = m.d_inner(d), m.d_state, m.d_conv
+    dtr = dt_rank(cfg)
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   * (1.0 / math.sqrt(dc))).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.dense_init(ks[2], di, dtr + 2 * st, dtype=dt),
+        "dt_w": L.dense_init(ks[3], dtr, di, dtype=dt),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1), jnp.float32),  # softplus^-1(1)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], di, d, dtype=dt),
+    }
+
+
+def _causal_conv(p, x, cfg):
+    """Depthwise causal conv. x: (B, S, di) -> (B, S, di)."""
+    dc = cfg.mamba.d_conv
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(dc))
+    return out + p["conv_b"]
+
+
+def _ssm_scan(p, xr, dt_, B_, C_, h0):
+    """Selective scan. xr/dt_: (B,S,di); B_/C_: (B,S,st); h0: (B,di,st)."""
+    A = -jnp.exp(p["A_log"])                                  # (di, st)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                              # (B,di),(B,di),(B,st),(B,st)
+        dA = jnp.exp(dt_t[..., None] * A)                      # (B,di,st)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]        # (B,di,st)
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t)                   # (B,di)
+        return h, y
+
+    tm = lambda a: jnp.moveaxis(a, 1, 0)                       # time-major
+    h, ys = jax.lax.scan(step, h0,
+                         (tm(xr.astype(jnp.float32)), tm(dt_), tm(B_), tm(C_)))
+    return h, jnp.moveaxis(ys, 0, 1)                           # (B,S,di)
+
+
+def _projections(p, xc, cfg):
+    st = cfg.mamba.d_state
+    dtr = dt_rank(cfg)
+    proj = L.dense(p["x_proj"], xc)
+    dt_in, B_, C_ = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt_ = jax.nn.softplus(L.dense(p["dt_w"], dt_in).astype(jnp.float32)
+                          + p["dt_bias"])
+    return dt_, B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def mamba_forward(p, x, cfg):
+    """Train/prefill. x: (B, S, d). Returns (out, (conv_state, ssm_state))."""
+    B, S, _ = x.shape
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    xz = L.dense(p["in_proj"], x)
+    xr, z = xz[..., :di], xz[..., di:]
+    conv_in = xr
+    xc = jax.nn.silu(_causal_conv(p, conv_in, cfg))
+    dt_, B_, C_ = _projections(p, xc, cfg)
+    h0 = jnp.zeros((B, di, m.d_state), jnp.float32)
+    h, ys = _ssm_scan(p, xc, dt_, B_, C_, h0)
+    y = ys + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = L.dense(p["out_proj"], y)
+    # cache: last (d_conv - 1) pre-conv inputs + final ssm state
+    conv_state = conv_in[:, S - (m.d_conv - 1):, :] if S >= m.d_conv - 1 else \
+        jnp.pad(conv_in, ((0, 0), (m.d_conv - 1 - S, 0), (0, 0)))
+    return out, (conv_state, h)
+
+
+def mamba_decode(p, x, cache, cfg):
+    """One-token decode. x: (B, 1, d); cache: (conv_state, ssm_state)."""
+    conv_state, h = cache
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    xz = L.dense(p["in_proj"], x)
+    xr, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([conv_state, xr], axis=1)         # (B, dc, di)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                           # (B,1,di)
+    dt_, B_, C_ = _projections(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt_[:, 0, :, None] * A)
+    dBx = (dt_[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * B_[:, 0, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_[:, 0])
+    y = y + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = L.dense(p["out_proj"], y)[:, None, :]
+    return out, (window[:, 1:, :], h)
+
+
+def mamba_cache_init(cfg, batch, dtype):
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    return (jnp.zeros((batch, m.d_conv - 1, di), dtype),
+            jnp.zeros((batch, di, m.d_state), jnp.float32))

@@ -1,0 +1,402 @@
+"""Composable decoder: assembles layer groups from a ModelConfig.
+
+A config declares ``groups = ((period_specs, count), ...)``; parameters
+for each group are stacked along a leading ``count`` axis and the group
+is executed with ``lax.scan`` (optionally wrapped in ``jax.checkpoint``)
+— this keeps the lowered HLO proportional to the *period* length, not
+the layer count, which is what makes 61-layer x full-size dry-run
+compiles tractable and is also the idiomatic TPU pattern (one fused
+while-loop body reused across layers).
+
+Entry points:
+  init_params(cfg, key)
+  forward_train(params, cfg, tokens, ...) -> (logits, aux)
+  prefill(params, cfg, tokens, ...)       -> (last_logits, cache)
+  decode_step(params, cfg, tokens, cache, t, ...) -> (logits, cache)
+  init_cache(cfg, batch, cache_len, ...)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import rwkv as R
+from . import ssm as S
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def init_layer(key, cfg, spec):
+    d = cfg.d_model
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.rmsnorm_init(d, dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = A.attn_init(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["mixer"] = A.mla_init(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = S.mamba_init(ks[0], cfg)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = R.rwkv6_init(ks[0], cfg)
+    elif spec.mixer == "cross_attn":
+        p["mixer"] = A.attn_init(ks[0], cfg, cross=True)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)   # llama-vision gated cross
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["norm_c"] = L.rmsnorm_init(d, dt)
+        p["cross"] = A.attn_init(ks[1], cfg, cross=True)
+    if spec.mlp != "none":
+        p["norm2"] = L.rmsnorm_init(d, dt)
+    if spec.mlp == "dense":
+        p["mlp"] = L.mlp_init(ks[2], d, cfg.d_ff, cfg.mlp_act, dtype=dt)
+    elif spec.mlp == "moe":
+        p["mlp"] = M.moe_init(ks[2], cfg)
+    elif spec.mlp == "rwkv_cmix":
+        p["mlp"] = R.cmix_init(ks[2], cfg)
+    return p
+
+
+def _init_period(key, cfg, specs):
+    ks = jax.random.split(key, len(specs))
+    return {str(i): init_layer(ks[i], cfg, s) for i, s in enumerate(specs)}
+
+
+def init_params(cfg, key):
+    d = cfg.d_model
+    dt = L.pdtype(cfg)
+    k_embed, k_head, k_groups, k_cond, k_mtp = jax.random.split(key, 5)
+    params = {
+        "embed": {"emb": (jax.random.normal(
+            k_embed, (cfg.n_codebooks, cfg.vocab_size, d), jnp.float32)
+            * 0.02).astype(dt)},
+        "final_norm": L.rmsnorm_init(d, dt),
+        "groups": {},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            k_head, d, cfg.n_codebooks * cfg.vocab_size, dtype=dt)
+    if cfg.cond_dim:
+        params["cond_proj"] = L.dense_init(k_cond, cfg.cond_dim, d, dtype=dt)
+    gkeys = jax.random.split(k_groups, len(cfg.groups))
+    for gi, (specs, count) in enumerate(cfg.groups):
+        keys = jax.random.split(gkeys[gi], count)
+        params["groups"][str(gi)] = jax.vmap(
+            partial(_init_period, cfg=cfg, specs=specs))(keys)
+    if cfg.mtp:
+        specs_last = cfg.groups[-1][0]
+        mtp_spec = specs_last[0]
+        params["mtp"] = {
+            "proj": L.dense_init(k_mtp, 2 * d, d, dtype=dt),
+            "norm_h": L.rmsnorm_init(d, dt),
+            "norm_e": L.rmsnorm_init(d, dt),
+            "layer": init_layer(jax.random.fold_in(k_mtp, 1), cfg, mtp_spec),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------
+# Layer application
+# ----------------------------------------------------------------------
+
+def _pack_ring(full, positions, Wc):
+    """Pack per-position arrays (B, S, ...) into a ring buffer (B, Wc, ...).
+
+    Keeps the last min(S, Wc) positions; slot of position p is p % Wc.
+    Returns (buffer, slot_positions (Wc,)).
+    """
+    B, Sq = full.shape[0], full.shape[1]
+    n = min(Sq, Wc)
+    tail = full[:, Sq - n:]
+    tail_pos = positions[Sq - n:]
+    slots = jnp.mod(tail_pos, Wc)
+    buf = jnp.zeros((B, Wc) + full.shape[2:], full.dtype)
+    buf = buf.at[:, slots].set(tail)
+    pos = jnp.full((Wc,), -1, jnp.int32).at[slots].set(tail_pos)
+    return buf, pos
+
+
+def apply_layer(lp, spec, x, ctx, mode, cache, t):
+    """Returns (x, new_cache, aux)."""
+    cfg = ctx["cfg"]
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    window = spec.window or (ctx["window_attn"] if spec.mixer == "attn" else 0)
+
+    # ---- mixer sublayer ----
+    h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if spec.mixer in ("attn", "mla"):
+        if mode == "decode":
+            fn = A.attn_decode if spec.mixer == "attn" else A.mla_decode
+            mix, new_cache["kv"] = fn(lp["mixer"], h, cache["kv"], t, cfg,
+                                      window=window)
+        else:
+            fn = A.attn_forward if spec.mixer == "attn" else A.mla_forward
+            mix, kv = fn(lp["mixer"], h, ctx["positions"], cfg,
+                         window=window, kernel=ctx["kernel"])
+            if mode == "prefill":
+                new_cache["kv"] = _prefill_kv_cache(spec, kv, ctx)
+    elif spec.mixer == "mamba":
+        if mode == "decode":
+            mix, st = S.mamba_decode(lp["mixer"], h, cache["ssm"], cfg)
+        else:
+            mix, st = S.mamba_forward(lp["mixer"], h, cfg)
+        if mode != "train":
+            new_cache["ssm"] = st
+    elif spec.mixer == "rwkv6":
+        prev = cache["rwkv"] if mode == "decode" else None
+        mix, (last_x, state) = R.rwkv6_tmix(
+            lp["mixer"], h, cfg,
+            state=prev["state"] if prev else None,
+            x_prev=prev["tshift"] if prev else None)
+        if mode != "train":
+            new_cache["rwkv"] = {"tshift": last_x, "state": state}
+    elif spec.mixer == "cross_attn":
+        if mode == "decode":
+            ckv = (cache["cross"]["k"], cache["cross"]["v"])
+        else:
+            ckv = A.cross_kv(lp["mixer"], ctx["cond_x"], cfg)
+            if mode == "prefill":
+                new_cache["cross"] = {"k": ckv[0], "v": ckv[1]}
+        mix = A.cross_attn_forward(lp["mixer"], h, ckv, cfg)
+        mix = jnp.tanh(lp["gate_attn"]).astype(mix.dtype) * mix
+        if mode == "decode":
+            new_cache["cross"] = cache["cross"]
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mix
+
+    # ---- optional conditioning cross-attention sublayer (musicgen) ----
+    if spec.cross:
+        h = L.rmsnorm(lp["norm_c"], x, cfg.norm_eps)
+        if mode == "decode":
+            ckv = (cache["cond"]["k"], cache["cond"]["v"])
+            new_cache["cond"] = cache["cond"]
+        else:
+            ckv = A.cross_kv(lp["cross"], ctx["cond_x"], cfg)
+            if mode == "prefill":
+                new_cache["cond"] = {"k": ckv[0], "v": ckv[1]}
+        x = x + A.cross_attn_forward(lp["cross"], h, ckv, cfg)
+
+    # ---- mlp sublayer ----
+    if spec.mlp != "none":
+        h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if spec.mlp == "dense":
+            out = L.mlp(lp["mlp"], h, cfg.mlp_act)
+        elif spec.mlp == "moe":
+            if ctx.get("moe_a2a"):
+                out, aux = M.moe_forward_a2a(lp["mlp"], h, cfg,
+                                             **ctx["moe_a2a"])
+            else:
+                if ctx.get("moe_pre"):
+                    # decode: replicate the (tiny) token activations over
+                    # the model axis so dispatch against expert-sharded
+                    # weights is comm-free (§Perf decode iteration)
+                    h = ctx["moe_pre"](h)
+                out, aux = M.moe_forward(lp["mlp"], h, cfg)
+        elif spec.mlp == "rwkv_cmix":
+            prev = cache.get("cmix") if mode == "decode" else None
+            out, last_c = R.rwkv6_cmix(lp["mlp"], h, cfg, x_prev=prev)
+            if mode != "train":
+                new_cache["cmix"] = last_c
+        x = x + out
+    return x, new_cache, aux
+
+
+def _prefill_kv_cache(spec, kv, ctx):
+    Wc = ctx["cache_len"]
+    positions = ctx["positions"][0] if ctx["positions"].ndim == 2 else ctx["positions"]
+    if spec.mixer == "attn":
+        k, v = kv
+        kb, pos = _pack_ring(k, positions, Wc)
+        vb, _ = _pack_ring(v, positions, Wc)
+        return {"k": kb, "v": vb, "pos": pos}
+    ckv, krope = kv
+    cb, pos = _pack_ring(ckv, positions, Wc)
+    rb, _ = _pack_ring(krope, positions, Wc)
+    return {"ckv": cb, "krope": rb, "pos": pos}
+
+
+def apply_period(pp, specs, x, ctx, mode, cache, t):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for i, spec in enumerate(specs):
+        lc = cache[str(i)] if cache is not None else None
+        x, nc, a = apply_layer(pp[str(i)], spec, x, ctx, mode, lc, t)
+        new_cache[str(i)] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, tokens):
+    emb = params["embed"]["emb"]                       # (ncb, V, d)
+    if cfg.n_codebooks == 1:
+        return jnp.take(emb[0], tokens, axis=0)
+    parts = [jnp.take(emb[c], tokens[..., c], axis=0)
+             for c in range(cfg.n_codebooks)]
+    return sum(parts)
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]["emb"].reshape(cfg.n_codebooks * cfg.vocab_size,
+                                           cfg.d_model).T
+        out = x @ w
+    else:
+        out = L.dense(params["lm_head"], x)
+    if cfg.n_codebooks > 1:
+        out = out.reshape(out.shape[:-1] + (cfg.n_codebooks, cfg.vocab_size))
+    return out
+
+
+def _cond_x(params, cfg, cond):
+    if cond is None:
+        return None
+    return L.dense(params["cond_proj"], cond.astype(L.pdtype(cfg)))
+
+
+def _make_ctx(cfg, positions, cond_x, *, kernel="jnp", window_attn=0,
+              cache_len=0, constrain=None, moe_a2a=None, moe_pre=None):
+    return {"cfg": cfg, "positions": positions, "cond_x": cond_x,
+            "kernel": kernel, "window_attn": window_attn,
+            "cache_len": cache_len, "constrain": constrain or (lambda a: a),
+            "moe_a2a": moe_a2a, "moe_pre": moe_pre}
+
+
+def forward_train(params, cfg, tokens, *, cond=None, next_tokens=None,
+                  kernel="jnp", constrain=None, moe_a2a=None):
+    """Returns (logits, {'moe_aux', 'mtp_logits'?})."""
+    B, Sq = tokens.shape[0], tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = _embed_tokens(params, cfg, tokens)
+    if constrain:
+        x = constrain(x)
+    ctx = _make_ctx(cfg, positions, _cond_x(params, cfg, cond),
+                    kernel=kernel, constrain=constrain, moe_a2a=moe_a2a)
+    aux = jnp.zeros((), jnp.float32)
+
+    for gi, (specs, count) in enumerate(cfg.groups):
+        def body(carry, pp, specs=specs):
+            x, aux = carry
+            x, _, a = apply_period(pp, specs, x, ctx, "train", None, None)
+            if constrain:
+                x = constrain(x)
+            return (x, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"][str(gi)])
+
+    h = x
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    extras = {"moe_aux": aux}
+
+    if cfg.mtp and next_tokens is not None:
+        mp = params["mtp"]
+        e = _embed_tokens(params, cfg, next_tokens)
+        hcat = jnp.concatenate([L.rmsnorm(mp["norm_h"], h, cfg.norm_eps),
+                                L.rmsnorm(mp["norm_e"], e, cfg.norm_eps)], -1)
+        h2 = L.dense(mp["proj"], hcat)
+        spec = cfg.groups[-1][0][0]
+        h2, _, a2 = apply_layer(mp["layer"], spec, h2, ctx, "train", None, None)
+        extras["moe_aux"] = extras["moe_aux"] + a2
+        h2 = L.rmsnorm(params["final_norm"], h2, cfg.norm_eps)
+        extras["mtp_logits"] = _logits(params, cfg, h2)
+    return logits, extras
+
+
+def prefill(params, cfg, tokens, *, cond=None, cache_len=None,
+            window_attn=0, kernel="jnp", constrain=None, moe_a2a=None):
+    """Process a full prompt; returns (last_token_logits, cache)."""
+    B, Sq = tokens.shape[0], tokens.shape[1]
+    if cache_len is None:
+        cache_len = Sq
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = _embed_tokens(params, cfg, tokens)
+    if constrain:
+        x = constrain(x)
+    ctx = _make_ctx(cfg, positions, _cond_x(params, cfg, cond), kernel=kernel,
+                    window_attn=window_attn, cache_len=cache_len,
+                    constrain=constrain, moe_a2a=moe_a2a)
+    caches = {}
+    for gi, (specs, count) in enumerate(cfg.groups):
+        def body(x, pp, specs=specs):
+            x, nc, _ = apply_period(pp, specs, x, ctx, "prefill", None, None)
+            if constrain:
+                x = constrain(x)
+            return x, nc
+        x, gc = jax.lax.scan(body, x, params["groups"][str(gi)])
+        caches[str(gi)] = gc
+    x = L.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg, tokens, cache, t, *, window_attn=0,
+                constrain=None, moe_pre=None):
+    """One-token decode. tokens: (B, 1[, ncb]); t: scalar position."""
+    x = _embed_tokens(params, cfg, tokens)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), t, jnp.int32)
+    ctx = _make_ctx(cfg, positions, None, window_attn=window_attn,
+                    constrain=constrain, moe_pre=moe_pre)
+    new_caches = {}
+    for gi, (specs, count) in enumerate(cfg.groups):
+        def body(x, xs, specs=specs):
+            pp, lc = xs
+            x, nc, _ = apply_period(pp, specs, x, ctx, "decode", lc, t)
+            return x, nc
+        x, gc = jax.lax.scan(body, x, (params["groups"][str(gi)], cache[str(gi)]))
+        new_caches[str(gi)] = gc
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), new_caches
+
+
+# ----------------------------------------------------------------------
+# Cache init (shape source of truth for decode input specs)
+# ----------------------------------------------------------------------
+
+def init_layer_cache(cfg, spec, batch, cache_len, dtype):
+    c = {}
+    if spec.mixer == "attn":
+        c["kv"] = A.attn_cache_init(cfg, batch, cache_len, dtype)
+    elif spec.mixer == "mla":
+        c["kv"] = A.mla_cache_init(cfg, batch, cache_len, dtype)
+    elif spec.mixer == "mamba":
+        c["ssm"] = S.mamba_cache_init(cfg, batch, dtype)
+    elif spec.mixer == "rwkv6":
+        rc = R.rwkv6_cache_init(cfg, batch, dtype)
+        c["rwkv"] = {"tshift": rc["tshift"], "state": rc["state"]}
+    elif spec.mixer == "cross_attn":
+        KV, D = cfg.n_kv_heads, cfg.head_dim
+        c["cross"] = {"k": jnp.zeros((batch, cfg.cond_seq_len, KV, D), dtype),
+                      "v": jnp.zeros((batch, cfg.cond_seq_len, KV, D), dtype)}
+    if spec.cross:
+        KV, D = cfg.n_kv_heads, cfg.head_dim
+        c["cond"] = {"k": jnp.zeros((batch, cfg.cond_seq_len, KV, D), dtype),
+                     "v": jnp.zeros((batch, cfg.cond_seq_len, KV, D), dtype)}
+    if spec.mlp == "rwkv_cmix":
+        c["cmix"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    return c
+
+
+def init_cache(cfg, batch, cache_len, dtype=None):
+    dtype = dtype or L.pdtype(cfg)
+    caches = {}
+    for gi, (specs, count) in enumerate(cfg.groups):
+        period = {str(i): init_layer_cache(cfg, s, batch, cache_len, dtype)
+                  for i, s in enumerate(specs)}
+        caches[str(gi)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape).copy(), period)
+    return caches

@@ -1,0 +1,142 @@
+"""LLM serving engine: batched prefill + decode with prefix caching.
+
+This is the assigned-architecture analogue of EMSServe's per-modality
+feature cache (DESIGN.md §4): a request whose prompt extends an already-
+served prefix (system prompt, cached vision conditioning, an earlier
+turn) reuses the stored decode cache instead of re-encoding the prefix —
+the same redundant-computation elimination, applied to autoregressive
+state. Works for every cache family in the zoo (KV ring buffers, MLA
+latents, SSM/RWKV states).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray                  # (S,) or (S, ncb) int32
+    max_new_tokens: int = 16
+    cond: Optional[np.ndarray] = None   # modality-frontend embeddings
+    eos_id: Optional[int] = None
+
+
+@dataclass
+class Result:
+    rid: str
+    tokens: np.ndarray
+    prefix_hit: bool
+    prefill_tokens: int                 # tokens actually encoded
+
+
+def _h(arr: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+class LLMServer:
+    """Static-batch greedy server for one architecture."""
+
+    def __init__(self, cfg, params, *, batch_size: int = 1,
+                 cache_len: int = 256, window: int = 0,
+                 enable_prefix_cache: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.window = window
+        self.enable_prefix_cache = enable_prefix_cache
+        self.prefix_cache: Dict[Tuple[str, int], Tuple[dict, int]] = {}
+        self.stats = {"prefix_hits": 0, "prefix_misses": 0,
+                      "prefill_tokens": 0, "decode_steps": 0}
+
+        self._prefill = jax.jit(partial(
+            T.prefill, cfg=cfg, cache_len=cache_len, window_attn=window),
+            static_argnames=())
+        self._decode = jax.jit(partial(
+            T.decode_step, cfg=cfg, window_attn=window))
+
+    # -------------------------------------------------------------- util
+
+    def _greedy(self, logits):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,1[,ncb])
+        return tok
+
+    def _lookup_prefix(self, prompt: np.ndarray):
+        """Longest stored prefix of ``prompt`` (length quantized by whole
+        prompts we've served)."""
+        if not self.enable_prefix_cache:
+            return None
+        for plen in range(len(prompt), 0, -1):
+            key = (_h(prompt[:plen]), plen)
+            if key in self.prefix_cache:
+                return plen, *self.prefix_cache[key]
+        return None
+
+    # ---------------------------------------------------------- serving
+
+    def serve_one(self, req: Request) -> Result:
+        """Single-request path (B=1) with prefix reuse."""
+        cfg = self.cfg
+        prompt = np.asarray(req.prompt)
+        S = len(prompt)
+        hit = self._lookup_prefix(prompt)
+        batchify = lambda a: jnp.asarray(a)[None]
+        cond = batchify(req.cond) if req.cond is not None else None
+
+        if hit is not None and hit[0] >= 1:
+            plen, cache, _ = hit
+            self.stats["prefix_hits"] += 1
+            # feed remaining prompt tokens through decode steps
+            t = plen
+            logits = None
+            for i in range(plen, S):
+                tok = batchify(prompt[i:i + 1]) if prompt.ndim == 1 else \
+                    batchify(prompt[i:i + 1])
+                logits, cache = self._decode(self.params, tokens=tok,
+                                             cache=cache, t=jnp.int32(i))
+                t = i + 1
+            if logits is None:   # prompt identical to cached prefix
+                # re-decode last prompt token to get logits (cheap)
+                i = S - 1
+                tok = batchify(prompt[i:i + 1])
+                logits, cache = self._decode(self.params, tokens=tok,
+                                             cache=cache, t=jnp.int32(i))
+            encoded = S - plen
+        else:
+            self.stats["prefix_misses"] += 1
+            logits, cache = self._prefill(self.params, tokens=batchify(prompt),
+                                          cond=cond)
+            encoded = S
+        self.stats["prefill_tokens"] += encoded
+
+        if self.enable_prefix_cache:
+            self.prefix_cache[(_h(prompt), S)] = (cache, S)
+
+        out = []
+        tok = self._greedy(logits)
+        out.append(np.asarray(tok)[0, 0])
+        for step in range(1, req.max_new_tokens):
+            t = S + step - 1
+            logits, cache = self._decode(self.params, tokens=tok,
+                                         cache=cache, t=jnp.int32(t))
+            tok = self._greedy(logits)
+            self.stats["decode_steps"] += 1
+            val = np.asarray(tok)[0, 0]
+            out.append(val)
+            if req.eos_id is not None and np.all(val == req.eos_id):
+                break
+        return Result(rid=req.rid, tokens=np.stack(out), prefix_hit=hit is not None,
+                      prefill_tokens=encoded)
+
+    def serve(self, requests: List[Request]) -> List[Result]:
+        return [self.serve_one(r) for r in requests]

@@ -1,0 +1,56 @@
+"""Checkpointing: pytree <-> .npz + structure JSON.
+
+Flat, dependency-free, works for params and optimizer state alike.
+Leaves are saved under their joined tree path; restore validates the
+structure against a template pytree.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path, tree, *, metadata=None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    meta = {"keys": sorted(flat), "metadata": metadata or {}}
+    path.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+
+
+def restore(path, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    path = Path(path)
+    if path.suffix != ".npz":
+        path = path.with_suffix(".npz")
+    data = np.load(path)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def metadata(path):
+    p = Path(path).with_suffix(".json")
+    return json.loads(p.read_text())["metadata"]

@@ -1,0 +1,149 @@
+"""EMSNet multitask training, including Progressive Modality Integration.
+
+Task selection mirrors the paper's P / M / Q / P-M / P-Q / M-Q / P-M-Q
+grid (protocol CE, medicine CE, quantity MSE). PMI (paper §3.2): the
+3-modal model is *not* trained from scratch on the tiny D2 — the
+text+vitals encoders come from the 2-modal model trained on the large
+D1 and are frozen (stop-gradient) while the freshly-initialized scene
+encoder and (warm-started) headers integrate the new modality.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.emsnet import EMSNetConfig
+from repro.models import emsnet as E
+from . import losses as LS
+from . import optimizer as OPT
+
+TASKS = ("protocol", "medicine", "quantity")
+
+
+def multitask_loss(out: dict, labels: dict, tasks=TASKS):
+    loss = jnp.zeros((), jnp.float32)
+    parts = {}
+    if "protocol" in tasks:
+        parts["protocol"] = LS.cross_entropy(out["protocol_logits"],
+                                             labels["protocol"])
+        loss += parts["protocol"]
+    if "medicine" in tasks:
+        parts["medicine"] = LS.cross_entropy(out["medicine_logits"],
+                                             labels["medicine"])
+        loss += parts["medicine"]
+    if "quantity" in tasks:
+        parts["quantity"] = LS.mse(out["quantity"], labels["quantity"])
+        loss += parts["quantity"]
+    return loss, parts
+
+
+def make_train_step(cfg: EMSNetConfig, modalities, tasks=TASKS, *,
+                    freeze=(), lr=1e-3):
+    opt_cfg, opt_init, opt_update = OPT.make_optimizer(
+        "adamw", lr=lr, warmup_steps=20, decay_steps=100_000)
+
+    def loss_fn(params, batch):
+        out = E.forward(params, cfg, batch, modalities, freeze=freeze)
+        loss, _ = multitask_loss(out, batch["labels"], tasks)
+        return loss
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if freeze:
+            grads = {k: (jax.tree.map(jnp.zeros_like, v) if k in freeze else v)
+                     for k, v in grads.items()}
+        new_params, opt_state, gnorm = opt_update(grads, opt_state, params)
+        if freeze:  # keep frozen subtrees bit-identical (no weight decay)
+            new_params = {k: (params[k] if k in freeze else v)
+                          for k, v in new_params.items()}
+        return new_params, opt_state, loss
+
+    return step, opt_init
+
+
+@partial(jax.jit, static_argnames=("cfg", "modalities", "tasks"))
+def eval_batch(params, cfg, batch, modalities, tasks=TASKS):
+    out = E.forward(params, cfg, batch, modalities)
+    metrics = {}
+    if "protocol" in tasks:
+        metrics.update({f"protocol_{k}": v for k, v in
+                        LS.topk_accuracy(out["protocol_logits"],
+                                         batch["labels"]["protocol"]).items()})
+    if "medicine" in tasks:
+        metrics.update({f"medicine_{k}": v for k, v in
+                        LS.topk_accuracy(out["medicine_logits"],
+                                         batch["labels"]["medicine"]).items()})
+    if "quantity" in tasks:
+        q, t = out["quantity"], batch["labels"]["quantity"]
+        metrics["quantity_mse"] = LS.mse(q, t)
+        metrics["quantity_pearsonr"] = LS.pearsonr(q, t)
+        metrics["quantity_spearmanr"] = LS.spearmanr(q, t)
+    return metrics
+
+
+def evaluate(params, cfg, ds, modalities, tasks=TASKS, *, batch_size=256):
+    accs = []
+    for i in range(0, len(ds) - batch_size + 1, batch_size):
+        batch = ds.batch(np.arange(i, i + batch_size), modalities)
+        accs.append(eval_batch(params, cfg, batch, modalities, tasks))
+    if not accs:
+        batch = ds.batch(np.arange(len(ds)), modalities)
+        accs = [eval_batch(params, cfg, batch, modalities, tasks)]
+    return {k: float(np.mean([a[k] for a in accs])) for k in accs[0]}
+
+
+def train(cfg: EMSNetConfig, loader, *, modalities, tasks=TASKS, steps=200,
+          seed=0, params=None, freeze=(), lr=1e-3, log_every=0):
+    step_fn, opt_init = make_train_step(cfg, modalities, tasks,
+                                        freeze=freeze, lr=lr)
+    if params is None:
+        params = E.init_params(cfg, jax.random.PRNGKey(seed), modalities)
+    opt_state = opt_init(params)
+    losses = []
+    for i in range(steps):
+        batch = next(loader)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1}: loss={np.mean(losses[-log_every:]):.4f}",
+                  flush=True)
+    return params, losses
+
+
+# ----------------------------------------------------------------------
+# Progressive Modality Integration
+# ----------------------------------------------------------------------
+
+def pmi_init(cfg: EMSNetConfig, params_2modal, *, seed=0,
+             base=("text", "vitals"), new="scene"):
+    """Build 3-modal params from a trained 2-modal model: reuse base
+    encoders, fresh scene encoder, warm-started headers (the first
+    |F_C^2modal| columns of each header copy the 2-modal weights)."""
+    modalities = tuple(base) + (new,)
+    fresh = E.init_params(cfg, jax.random.PRNGKey(seed), modalities)
+    params = dict(fresh)
+    for m in base:
+        params[m] = params_2modal[m]
+    dims = cfg.feature_dims
+    fc2 = sum(dims[m] for m in base)
+    heads = {}
+    for h in ("protocol", "medicine", "quantity"):
+        w = fresh["heads"][h]["w"]
+        w = w.at[:fc2].set(params_2modal["heads"][h]["w"])
+        heads[h] = {"w": w, "b": params_2modal["heads"][h]["b"]}
+    params["heads"] = heads
+    return params, modalities
+
+
+def pmi_finetune(cfg: EMSNetConfig, params_2modal, loader3, *, steps=200,
+                 seed=0, lr=1e-3, freeze_base=True, log_every=0):
+    """Stage-2 of PMI: integrate the scene modality on the small D2."""
+    params, modalities = pmi_init(cfg, params_2modal, seed=seed)
+    freeze = ("text", "vitals") if freeze_base else ()
+    return train(cfg, loader3, modalities=modalities, steps=steps, seed=seed,
+                 params=params, freeze=freeze, lr=lr, log_every=log_every)

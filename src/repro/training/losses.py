@@ -1,0 +1,61 @@
+"""Losses and metrics: CE (+top-k accuracy), MSE + Pearson/Spearman.
+
+Everything reduces in f32 and works on vocab-sharded logits under pjit
+(reductions over the sharded vocab axis become all-reduces).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, *, mask=None):
+    """logits: (..., V); labels: (...) int. Returns mean CE."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    label_logit = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def topk_accuracy(logits, labels, ks=(1, 3, 5)):
+    lf = logits.astype(jnp.float32).reshape(-1, logits.shape[-1])
+    lab = labels.reshape(-1)
+    out = {}
+    maxk = max(ks)
+    _, top = jax.lax.top_k(lf, maxk)
+    hit = top == lab[:, None]
+    for k in ks:
+        out[f"top{k}"] = jnp.mean(jnp.any(hit[:, :k], axis=1).astype(jnp.float32))
+    return out
+
+
+def mse(pred, target):
+    return jnp.mean(jnp.square(pred.astype(jnp.float32)
+                               - target.astype(jnp.float32)))
+
+
+def pearsonr(x, y):
+    x = x.astype(jnp.float32).reshape(-1)
+    y = y.astype(jnp.float32).reshape(-1)
+    xm = x - x.mean()
+    ym = y - y.mean()
+    denom = jnp.sqrt(jnp.sum(xm * xm) * jnp.sum(ym * ym))
+    return jnp.sum(xm * ym) / jnp.maximum(denom, 1e-9)
+
+
+def _ranks(x):
+    """Average-free ranks via double argsort (ties broken by order)."""
+    order = jnp.argsort(x)
+    r = jnp.zeros_like(x).at[order].set(jnp.arange(x.shape[0], dtype=x.dtype))
+    return r
+
+
+def spearmanr(x, y):
+    x = x.astype(jnp.float32).reshape(-1)
+    y = y.astype(jnp.float32).reshape(-1)
+    return pearsonr(_ranks(x), _ranks(y))

@@ -1,0 +1,147 @@
+"""Optimizers as pure pytree transforms: AdamW and Adafactor.
+
+AdamW is the default for CPU-scale training (EMSNet, smoke configs).
+Adafactor (factored second moment, no first moment) is the default for
+the large assigned architectures — its state is ~1/d_model of AdamW's,
+which is what keeps the 671B dry-run's bytes-per-device honest.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# ---------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, gnorm
+
+
+# ------------------------------------------------------------ Adafactor
+
+def _factored(shape):
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, v):
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv_ = beta * v["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(nv_ + 1e-30)
+            nv = {"v": nv_}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, gnorm
+
+
+# ------------------------------------------------------------- factory
+
+def make_optimizer(name: str, **kw):
+    cfg = OptConfig(name=name, **kw)
+    if name == "adamw":
+        return cfg, adamw_init, partial(adamw_update, cfg)
+    if name == "adafactor":
+        return cfg, adafactor_init, partial(adafactor_update, cfg)
+    if name == "sgd":
+        def sgd_init(params):
+            return {"step": jnp.zeros((), jnp.int32)}
+
+        def sgd_update(grads, state, params):
+            step = state["step"] + 1
+            lr = schedule(cfg, step)
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+                params, grads)
+            return new_params, {"step": step}, gnorm
+        return cfg, sgd_init, sgd_update
+    raise ValueError(name)

@@ -1,0 +1,43 @@
+import os
+
+# Tests run against the single real CPU device — the 512-device flag is
+# set ONLY by the dry-run entry point, never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_emsnet_cfg():
+    from repro.configs.emsnet import tiny
+    return tiny()
+
+
+def reduced_cfg(arch, d_model=64):
+    from repro.configs import get_config, reduced
+    return reduced(get_config(arch), d_model=d_model)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return reduced_cfg("mistral-nemo-12b")
+
+
+@pytest.fixture(scope="session")
+def tiny_moe_cfg():
+    return reduced_cfg("olmoe-1b-7b")

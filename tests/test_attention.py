@@ -1,0 +1,102 @@
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import ref
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 64, 4, 4, 16), (1, 96, 96, 4, 2, 32), (2, 48, 48, 8, 8, 8),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+def test_flash_jnp_matches_ref(key, shape, causal, window):
+    B, Sq, Sk, H, KV, D = shape
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KV, D))
+    v = jax.random.normal(ks[2], (B, Sk, KV, D))
+    out = A.flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                q_chunk=32, kv_chunk=16)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
+def test_flash_jnp_mixed_v_dim(key):
+    """MLA decompressed path: Dv != Dq."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 24))
+    k = jax.random.normal(ks[1], (1, 32, 4, 24))
+    v = jax.random.normal(ks[2], (1, 32, 4, 16))
+    out = A.flash_attention_jnp(q, k, v, q_chunk=8, kv_chunk=8)
+    want = ref.attention_ref(q, k, v)
+    assert out.shape == (1, 32, 4, 16)
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
+def test_ring_write_wraps(key):
+    buf = jnp.zeros((1, 4, 2, 2))
+    new = jnp.ones((1, 1, 2, 2))
+    out = A.ring_write(buf, new, jnp.int32(5))     # slot 5 % 4 = 1
+    assert float(out[0, 1].sum()) == 4.0
+    assert float(out.sum()) == 4.0
+
+
+def test_decode_matches_full_attention(key, tiny_dense_cfg):
+    """Ring-buffer decode at position t equals full self-attention row t."""
+    cfg = tiny_dense_cfg
+    p = A.attn_init(key, cfg)
+    B, S = 2, 10
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full, (kf, vf) = A.attn_forward(p, x, pos, cfg)
+    cache = A.attn_cache_init(cfg, B, S, jnp.float32)
+    for t in range(S):
+        out, cache = A.attn_decode(p, x[:, t:t + 1], cache, jnp.int32(t), cfg)
+    np.testing.assert_allclose(out, full[:, -1:], atol=1e-4)
+
+
+def test_sliding_window_decode_drops_old(key, tiny_dense_cfg):
+    """With window W, decode at t>=W must equal attention over last W only."""
+    cfg = tiny_dense_cfg
+    p = A.attn_init(key, cfg)
+    B, S, W = 1, 12, 4
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full, _ = A.attn_forward(p, x, pos, cfg, window=W)
+    cache = A.attn_cache_init(cfg, B, W, jnp.float32)
+    for t in range(S):
+        out, cache = A.attn_decode(p, x[:, t:t + 1], cache, jnp.int32(t), cfg,
+                                   window=W)
+    np.testing.assert_allclose(out, full[:, -1:], atol=1e-4)
+
+
+def test_mla_decode_matches_forward(key):
+    cfg = reduced(get_config("deepseek-v3-671b"), d_model=64)
+    p = A.mla_init(key, cfg)
+    B, S = 2, 8
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full, _ = A.mla_forward(p, x, pos, cfg)
+    cache = A.mla_cache_init(cfg, B, S, jnp.float32)
+    for t in range(S):
+        out, cache = A.mla_decode(p, x[:, t:t + 1], cache, jnp.int32(t), cfg)
+    np.testing.assert_allclose(out, full[:, -1:], atol=1e-4)
+
+
+def test_cross_attention_ignores_order(key, tiny_dense_cfg):
+    """Cross attention over conditioning is permutation-equivariant in kv."""
+    cfg = tiny_dense_cfg
+    p = A.attn_init(key, cfg, cross=True)
+    x = jax.random.normal(key, (1, 4, cfg.d_model), jnp.float32)
+    cond = jax.random.normal(key, (1, 6, cfg.d_model), jnp.float32)
+    kv = A.cross_kv(p, cond, cfg)
+    out1 = A.cross_attn_forward(p, x, kv, cfg)
+    perm = jnp.array([3, 1, 0, 2, 5, 4])
+    kvp = (kv[0][:, perm], kv[1][:, perm])
+    out2 = A.cross_attn_forward(p, x, kvp, cfg)
+    np.testing.assert_allclose(out1, out2, atol=1e-5)

@@ -1,0 +1,225 @@
+"""EMSServe core: splitter equivalence, feature cache invariants,
+offloading decisions, episodes, med-math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, EMSServe,
+                        FeatureCache, HeartbeatMonitor, ProfileTable,
+                        StalenessError, emsnet_module, nlos_bandwidth, split,
+                        table6)
+from repro.core import episodes as EP
+from repro.core import medmath as MM
+
+
+@pytest.fixture(scope="module")
+def tiny_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    key = jax.random.PRNGKey(0)
+    mods = {
+        "m1": emsnet_module(cfg, ("text",)),
+        "m2": emsnet_module(cfg, ("text", "vitals")),
+        "m3": emsnet_module(cfg, ("text", "vitals", "scene")),
+    }
+    splits = {k: split(m) for k, m in mods.items()}
+    params = {k: m.init_fn(jax.random.fold_in(key, i))
+              for i, (k, m) in enumerate(mods.items())}
+    return cfg, splits, params
+
+
+def _payloads(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                         (1, cfg.max_text_len)), jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, cfg.vitals_len,
+                                               cfg.n_vitals)), jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+
+
+# ------------------------------------------------------------- splitter
+
+def test_split_equals_full(tiny_models):
+    """tail(encoders(x)) == full(x): the split is lossless."""
+    cfg, splits, params = tiny_models
+    batch = _payloads(cfg)
+    sm = splits["m3"]
+    feats = {m: sm.encoders[m](params["m3"], batch[m])
+             for m in sm.modalities()}
+    via_split = sm.tail(params["m3"], feats)
+    via_full = sm.full(params["m3"], batch)
+    for k in via_full:
+        np.testing.assert_allclose(via_split[k], via_full[k], atol=1e-5)
+
+
+# -------------------------------------------------------- feature cache
+
+def test_cache_staleness_invariant():
+    c = FeatureCache(max_staleness=1)
+    c.put("s", "text", 1.0, step=1)
+    assert c.get("s", "text", input_step=2).feature == 1.0   # 1 step: OK
+    with pytest.raises(StalenessError):
+        c.get("s", "text", input_step=3)
+
+
+def test_cache_versioning_and_tiers():
+    c = FeatureCache()
+    c.put("s", "v", 1, step=1, tier="edge")
+    c.put("s", "v", 2, step=2, tier="edge")
+    assert c.get("s", "v").version == 1
+    c.drop_tier("edge")
+    assert c.get("s", "v") is None
+    assert c.misses == 1
+
+
+def test_cache_touch_restamps():
+    c = FeatureCache(max_staleness=1)
+    c.put("s", "t", 0, step=1)
+    c.touch("s", "t", 5)
+    assert c.get("s", "t", input_step=5).feature == 0
+
+
+# ----------------------------------------------------------- offloading
+
+def test_offload_rule_exact():
+    prof = ProfileTable(base={"enc:text": 0.1}, host_tier="edge4c")
+    mon = HeartbeatMonitor(BandwidthTrace.static(1e6))
+    pol = AdaptiveOffloadPolicy(prof, mon)
+    # t_edge = 0.1, t_glass = 0.1*107/2.7 ≈ 3.96
+    d = pol.decide("enc:text", payload_bytes=int(0.5e6), now=0.0)  # dt=0.5
+    assert d.tier == "edge" and d.delta_t == pytest.approx(0.5)
+    d = pol.decide("enc:text", payload_bytes=int(10e6), now=0.0)   # dt=10
+    assert d.tier == "glass"
+
+
+def test_heartbeat_quantization():
+    tr = BandwidthTrace([(0.0, 100.0), (1.0, 200.0)])
+    mon = HeartbeatMonitor(tr, period=1.0)
+    assert mon.bandwidth(0.4) == 100.0
+    assert mon.bandwidth(1.7) == 200.0
+
+
+def test_nlos_bandwidth_monotone():
+    bws = [nlos_bandwidth(d) for d in (0, 5, 10, 20, 30)]
+    assert all(a > b for a, b in zip(bws, bws[1:]))
+
+
+# -------------------------------------------------------------- episodes
+
+def test_table6_matches_paper():
+    eps = table6()
+    for i in (1, 2, 3):
+        kinds = [e.modality for e in eps[i]]
+        assert len(kinds) == 21
+        assert kinds.count("text") == 1
+        assert kinds.count("vitals") == 10
+        assert kinds.count("scene") == 10
+    assert [e.modality for e in eps[1][:2]] == ["text", "vitals"]
+
+
+def test_random_episode_has_text():
+    ev = EP.random_episode(15, seed=3)
+    assert any(e.modality == "text" for e in ev)
+    assert [e.index for e in ev] == list(range(15))
+
+
+# ---------------------------------------------------------------- engine
+
+def test_engine_cached_matches_direct_outputs(tiny_models):
+    """The feature cache must not change recommendations, only cost."""
+    cfg, splits, params = tiny_models
+    payloads = _payloads(cfg)
+    outs = {}
+    for cached in (False, True):
+        eng = EMSServe(splits, params, cached=cached, real_time=True)
+        eng.run_episode(table6()[2], lambda ev: payloads[ev.modality])
+        recs = [r.recommendation for r in eng.records
+                if r.recommendation is not None]
+        outs[cached] = recs
+    assert len(outs[True]) == len(outs[False])
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_allclose(a["protocol_logits"],
+                                   b["protocol_logits"], atol=1e-5)
+
+
+def test_engine_cache_cheaper_than_direct(tiny_models):
+    cfg, splits, params = tiny_models
+    payloads = _payloads(cfg)
+    times = {}
+    for cached in (False, True):
+        eng = EMSServe(splits, params, cached=cached, real_time=True)
+        # warmup compile
+        eng.run_episode(table6()[1], lambda ev: payloads[ev.modality])
+        eng2 = EMSServe(splits, params, cached=cached, real_time=True)
+        eng2.run_episode(table6()[1], lambda ev: payloads[ev.modality])
+        times[cached] = eng2.cumulative_time()
+    assert times[True] < times[False]
+
+
+def test_engine_fault_tolerance(tiny_models):
+    """Edge crash mid-episode: serving continues on-glass, recommendations
+    keep flowing, staleness invariant holds throughout."""
+    cfg, splits, params = tiny_models
+    payloads = _payloads(cfg)
+    prof_base = {"enc:text": 0.05, "enc:vitals": 0.001, "enc:scene": 0.001,
+                 "tail": 0.001, "full": 0.06}
+    pol = AdaptiveOffloadPolicy(
+        ProfileTable(base=prof_base),
+        HeartbeatMonitor(BandwidthTrace.static(nlos_bandwidth(0))))
+    eng = EMSServe(splits, params, policy=pol, cached=True)
+    events = table6()[1]
+    for i, ev in enumerate(events):
+        if i == 8:
+            eng.crash_edge()
+        rec = eng.on_event(ev, payloads[ev.modality])
+        if i > 8:
+            assert rec.tier == "glass"
+    assert eng.records[-1].recommendation is not None
+
+
+def test_engine_adaptive_beats_forced_edge_under_mobility(tiny_models):
+    """Scenario 3: with degrading bandwidth, adaptive < always-offload."""
+    cfg, splits, params = tiny_models
+    payloads = _payloads(cfg)
+    prof_base = {"enc:text": 0.05, "enc:vitals": 0.001, "enc:scene": 0.005,
+                 "tail": 0.001, "full": 0.06}
+    dist = list(np.linspace(0, 60, 21))     # walking away
+    results = {}
+    for adaptive in (True, False):
+        pol = AdaptiveOffloadPolicy(
+            ProfileTable(base=prof_base),
+            HeartbeatMonitor(BandwidthTrace.walk(dist, nlos_bandwidth)),
+            adaptive=adaptive)
+        eng = EMSServe(splits, params, policy=pol, cached=True)
+        eng.run_episode(table6()[1], lambda ev: payloads[ev.modality])
+        results[adaptive] = eng.cumulative_time()
+    assert results[True] <= results[False]
+
+
+# -------------------------------------------------------------- med math
+
+def test_med_math_paper_example():
+    assert MM.med_math(21.0, 4.2) == pytest.approx(5.0)
+
+
+def test_med_math_rejects_bad_concentration():
+    with pytest.raises(ValueError):
+        MM.med_math(1.0, 0.0)
+
+
+def test_ed_match_corrects_ocr_noise():
+    assert MM.ed_match("nal0xone") == "naloxone"
+    assert MM.ed_match("atrovnet") == "atrovent"
+    assert MM.ed_match("zzzzqqqq") is None
+
+
+def test_dosage_pipeline():
+    out = MM.dosage_from_label(10.0, "naloxon")
+    assert out["medicine"] == "naloxone"
+    assert out["dosage_ml"] == pytest.approx(
+        10.0 / out["concentration_mg_per_ml"])
+    assert len(out["disease_history"]) > 0
+    assert all(0 <= d < MM.N_DISEASES for d in out["disease_history"])

@@ -1,0 +1,216 @@
+"""Data pipeline invariants, EMSNet training, PMI, optimizer, losses,
+checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic_nemsis as D
+from repro.training import checkpoint as CKPT
+from repro.training import emsnet_trainer as ET
+from repro.training import losses as LS
+from repro.training import optimizer as OPT
+
+
+@pytest.fixture(scope="module")
+def d1(tiny_emsnet_cfg):
+    return D.generate(tiny_emsnet_cfg, 1200, seed=0)
+
+
+# ------------------------------------------------------------------ data
+
+def test_dataset_shapes(tiny_emsnet_cfg, d1):
+    cfg = tiny_emsnet_cfg
+    assert d1.text.shape == (1200, cfg.max_text_len)
+    assert d1.vitals.shape == (1200, cfg.vitals_len, cfg.n_vitals)
+    assert d1.scene.shape == (1200, 3)
+    assert d1.protocol.max() < cfg.n_protocols
+    assert d1.medicine.max() < cfg.n_medicines
+
+
+def test_vitals_normalized_and_outlier_free(d1):
+    """Post-pipeline vitals: z-scored over valid entries, no default-value
+    artifacts (HR=500 etc. would be >> 5 sigma)."""
+    v = d1.vitals
+    assert np.abs(v).max() < 12.0
+    nz = v[np.abs(v) > 0]
+    assert abs(float(nz.mean())) < 0.3
+
+
+def test_vitals_left_padded(d1):
+    """Padding is at the START of the series (paper Appendix A)."""
+    v = d1.vitals
+    # find a sample with padding; all-zero prefix rows
+    has_pad = np.abs(v).sum(-1) == 0
+    for i in range(50):
+        pad_rows = np.where(has_pad[i])[0]
+        real_rows = np.where(~has_pad[i])[0]
+        if len(pad_rows) and len(real_rows):
+            assert pad_rows.max() < real_rows.min() or len(real_rows) == 0
+            break
+
+
+def test_quantity_labels_standardized(d1):
+    q = d1.quantity
+    assert abs(float(q.mean())) < 0.1
+    assert 0.8 < float(q.std()) < 1.2
+
+
+def test_split_ratios(d1):
+    tr, va, te = D.splits(d1)
+    assert len(tr) == 720 and len(va) == 240 and len(te) == 240
+    # disjoint
+    assert len(tr) + len(va) + len(te) == len(d1)
+
+
+def test_loader_batches(tiny_emsnet_cfg, d1):
+    ld = D.loader(d1, 32, modalities=("text", "vitals"))
+    b = next(ld)
+    assert b["text"].shape[0] == 32
+    assert "scene" not in b
+    assert set(b["labels"]) == {"protocol", "medicine", "quantity"}
+
+
+# ---------------------------------------------------------------- losses
+
+def test_cross_entropy_matches_manual(key):
+    logits = jax.random.normal(key, (7, 5))
+    labels = jnp.array([0, 1, 2, 3, 4, 0, 1])
+    got = LS.cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits)
+    want = -jnp.mean(p[jnp.arange(7), labels])
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+def test_topk_accuracy():
+    logits = jnp.array([[0.1, 0.9, 0.0], [0.8, 0.1, 0.1]])
+    labels = jnp.array([1, 2])
+    m = LS.topk_accuracy(logits, labels, ks=(1, 3))
+    assert float(m["top1"]) == 0.5
+    assert float(m["top3"]) == 1.0
+
+
+def test_pearson_spearman_vs_numpy(rng):
+    x = rng.normal(size=200).astype(np.float32)
+    y = 0.7 * x + rng.normal(size=200).astype(np.float32) * 0.5
+    got_p = float(LS.pearsonr(jnp.asarray(x), jnp.asarray(y)))
+    want_p = float(np.corrcoef(x, y)[0, 1])
+    assert got_p == pytest.approx(want_p, abs=1e-4)
+    # spearman == pearson of ranks
+    rx = np.argsort(np.argsort(x)).astype(np.float32)
+    ry = np.argsort(np.argsort(y)).astype(np.float32)
+    want_s = float(np.corrcoef(rx, ry)[0, 1])
+    got_s = float(LS.spearmanr(jnp.asarray(x), jnp.asarray(y)))
+    assert got_s == pytest.approx(want_s, abs=1e-3)
+
+
+# ------------------------------------------------------------- optimizer
+
+@pytest.mark.parametrize("name", ["adamw", "sgd", "adafactor"])
+def test_optimizer_decreases_quadratic(name, key):
+    _, init, update = OPT.make_optimizer(name, lr=0.1, weight_decay=0.0,
+                                         grad_clip=100.0, warmup_steps=0,
+                                         decay_steps=1000)
+    params = {"w": jax.random.normal(key, (8, 4))}
+    target = jnp.zeros((8, 4))
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+        params, state, _ = update(g, state, params)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = OPT.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0 * np.sqrt(10), rel=1e-4)
+    got = float(jnp.linalg.norm(clipped["a"]))
+    assert got == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OPT.OptConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                        min_lr_ratio=0.1)
+    assert float(OPT.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(OPT.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(OPT.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+# ------------------------------------------------------- EMSNet training
+
+def test_training_reduces_loss(tiny_emsnet_cfg, d1):
+    cfg = tiny_emsnet_cfg
+    tr, _, _ = D.splits(d1)
+    ld = D.loader(tr, 64, modalities=("text", "vitals"))
+    _, losses = ET.train(cfg, ld, modalities=("text", "vitals"), steps=60)
+    assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:10])
+
+
+def test_multimodal_beats_unimodal_vitals(tiny_emsnet_cfg, d1):
+    """Paper Table 3 direction: text+vitals >> vitals-only on protocol."""
+    cfg = tiny_emsnet_cfg
+    tr, _, te = D.splits(d1)
+    ld2 = D.loader(tr, 64, modalities=("text", "vitals"))
+    p2, _ = ET.train(cfg, ld2, modalities=("text", "vitals"), steps=120)
+    m2 = ET.evaluate(p2, cfg, te, ("text", "vitals"))
+    ldv = D.loader(tr, 64, modalities=("vitals",))
+    pv, _ = ET.train(cfg, ldv, modalities=("vitals",), steps=120)
+    mv = ET.evaluate(pv, cfg, te, ("vitals",))
+    assert m2["protocol_top1"] > mv["protocol_top1"] + 0.15
+
+
+def test_pmi_beats_scratch_on_small_d2(tiny_emsnet_cfg, d1):
+    """Paper Table 4 direction: PMI fine-tuning > training from scratch
+    when the 3-modal dataset is tiny."""
+    cfg = tiny_emsnet_cfg
+    tr, _, _ = D.splits(d1)
+    ld2 = D.loader(tr, 64, modalities=("text", "vitals"))
+    p2, _ = ET.train(cfg, ld2, modalities=("text", "vitals"), steps=120)
+
+    d2 = D.generate(cfg, 300, seed=5, modal3=True)
+    tr2, _, te2 = D.splits(d2)
+    ld3 = D.loader(tr2, 32)
+    p3, _ = ET.pmi_finetune(cfg, p2, ld3, steps=60)
+    m_pmi = ET.evaluate(p3, cfg, te2, ("text", "vitals", "scene"))
+    p3s, _ = ET.train(cfg, ld3, modalities=("text", "vitals", "scene"),
+                      steps=60)
+    m_scr = ET.evaluate(p3s, cfg, te2, ("text", "vitals", "scene"))
+    assert m_pmi["protocol_top1"] >= m_scr["protocol_top1"]
+
+
+def test_pmi_frozen_backbone_is_untouched(tiny_emsnet_cfg, d1):
+    cfg = tiny_emsnet_cfg
+    tr, _, _ = D.splits(d1)
+    ld2 = D.loader(tr, 32, modalities=("text", "vitals"))
+    p2, _ = ET.train(cfg, ld2, modalities=("text", "vitals"), steps=10)
+    d2 = D.generate(cfg, 200, seed=5, modal3=True)
+    tr2, _, _ = D.splits(d2)
+    p3, _ = ET.pmi_finetune(cfg, p2, D.loader(tr2, 16), steps=10)
+    for sub in ("text", "vitals"):
+        same = jax.tree.map(lambda a, b: np.array_equal(a, b), p2[sub], p3[sub])
+        assert all(jax.tree.leaves(same))
+
+
+# ------------------------------------------------------------ checkpoint
+
+def test_checkpoint_roundtrip(tmp_path, key, tiny_emsnet_cfg):
+    from repro.models import emsnet as E
+    params = E.init_params(tiny_emsnet_cfg, key, ("text", "vitals"))
+    path = tmp_path / "ckpt.npz"
+    CKPT.save(path, params, metadata={"note": "test"})
+    restored = CKPT.restore(path, jax.tree.map(np.asarray, params))
+    same = jax.tree.map(lambda a, b: np.array_equal(a, b), params, restored)
+    assert all(jax.tree.leaves(same))
+    assert CKPT.metadata(path)["note"] == "test"
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, key):
+    CKPT.save(tmp_path / "c.npz", {"w": np.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        CKPT.restore(tmp_path / "c.npz", {"w": np.zeros((3, 3))})

@@ -1,0 +1,65 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale(key):
+    p = L.rmsnorm_init(16)
+    x = jax.random.normal(key, (4, 16)) * 10
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+
+def test_layernorm_zero_mean(key):
+    p = L.layernorm_init(32)
+    x = jax.random.normal(key, (4, 32)) + 5
+    y = L.layernorm(p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm(key):
+    x = jax.random.normal(key, (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property(key):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.full((1, 1), i), 100.0)
+        kj = L.apply_rope(k, jnp.full((1, 1), j), 100.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rope_zero_position_identity(key):
+    x = jax.random.normal(key, (1, 4, 2, 8))
+    pos = jnp.zeros((1, 4), jnp.int32)
+    np.testing.assert_allclose(L.apply_rope(x, pos, 1e4), x, atol=1e-6)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "relu2"])
+def test_mlp_shapes(key, act):
+    p = L.mlp_init(key, 16, 32, act)
+    x = jax.random.normal(key, (3, 5, 16))
+    y = L.mlp(p, x, act)
+    assert y.shape == (3, 5, 16)
+    assert not jnp.isnan(y).any()
+
+
+def test_dense_bias(key):
+    p = L.dense_init(key, 4, 6, bias=True)
+    x = jnp.zeros((2, 4))
+    np.testing.assert_allclose(L.dense(p, x), 0.0)

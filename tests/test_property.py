@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.episodes import random_episode
+from repro.core.feature_cache import FeatureCache
+from repro.core.medmath import med_math
+from repro.core.offload import (AdaptiveOffloadPolicy, BandwidthTrace,
+                                HeartbeatMonitor, ProfileTable)
+from repro.kernels import ref
+from repro.models.attention import flash_attention_jnp
+from repro.training import losses as LS
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 2), st.integers(1, 48), st.integers(1, 3),
+       st.integers(1, 2), st.integers(2, 16), st.booleans(),
+       st.integers(0, 12), st.randoms(use_true_random=False))
+def test_flash_matches_ref_any_shape(B, Sq, G, KV, D, causal, window, pyrng):
+    """flash(q,k,v) == materialized softmax attention for arbitrary
+    shapes, GQA ratios, causal flags and windows."""
+    H = KV * G
+    Sk = Sq  # self-attention shapes
+    seed = pyrng.randint(0, 2**31)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KV, D))
+    v = jax.random.normal(ks[2], (B, Sk, KV, D))
+    got = flash_attention_jnp(q, k, v, causal=causal, window=window,
+                              q_chunk=16, kv_chunk=16)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(0, 50), st.sampled_from(
+    ["text", "vitals", "scene"])), min_size=1, max_size=40))
+def test_cache_last_write_wins(ops):
+    """Whatever sequence of puts happens, get returns the latest put and
+    version counts the number of overwrites."""
+    c = FeatureCache()
+    last = {}
+    counts = {}
+    for step, (val, mod) in enumerate(ops):
+        c.put("s", mod, val, step=step)
+        last[mod] = val
+        counts[mod] = counts.get(mod, -1) + 1
+    for mod, val in last.items():
+        e = c.get("s", mod)
+        assert e.feature == val
+        assert e.version == counts[mod]
+
+
+@settings(**SETTINGS)
+@given(st.floats(0.001, 1000), st.floats(0.001, 1000))
+def test_med_math_positive(q, c):
+    d = med_math(q, c)
+    assert d > 0
+    assert d * c == np.float64(q) or abs(d * c - q) / q < 1e-9
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 200), st.integers(0, 10_000))
+def test_random_episode_invariants(n, seed):
+    ev = random_episode(n, seed)
+    assert len(ev) == n
+    assert sum(e.modality == "text" for e in ev) >= 1
+    times = [e.arrival_time for e in ev]
+    assert times == sorted(times)
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e3, 1e9), st.floats(1e-4, 10.0), st.integers(1, 10**7))
+def test_offload_decision_consistent(bw, base_t, payload):
+    """The decision always picks the smaller modeled latency."""
+    prof = ProfileTable(base={"m": base_t})
+    pol = AdaptiveOffloadPolicy(prof, HeartbeatMonitor(BandwidthTrace.static(bw)))
+    d = pol.decide("m", payload, now=0.0)
+    edge_cost = d.delta_t + d.t_edge
+    glass_cost = d.t_glass
+    assert (d.tier == "edge") == (edge_cost < glass_cost)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(2, 8), st.randoms(use_true_random=False))
+def test_softmax_ce_nonnegative_and_bounded(n, v, pyrng):
+    key = jax.random.PRNGKey(pyrng.randint(0, 2**31))
+    logits = jax.random.normal(key, (n, v)) * 5
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, v)
+    ce = float(LS.cross_entropy(logits, labels))
+    assert ce >= 0.0
+    assert np.isfinite(ce)
+
+
+@settings(**SETTINGS)
+@given(st.integers(3, 100), st.randoms(use_true_random=False))
+def test_spearman_invariant_to_monotone_transform(n, pyrng):
+    rng = np.random.default_rng(pyrng.randint(0, 2**31))
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    s1 = float(LS.spearmanr(jnp.asarray(x), jnp.asarray(y)))
+    s2 = float(LS.spearmanr(jnp.asarray(np.exp(x)), jnp.asarray(y)))
+    assert abs(s1 - s2) < 1e-4

@@ -1,0 +1,164 @@
+"""Sharding policy rules + LLM serving engine (prefix cache)."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.distributed.sharding import Policy
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serving.engine import LLMServer, Request
+from repro.serving.kv_cache import cache_plan, uses_window
+from repro.configs.base import SHAPES
+
+
+# ------------------------------------------------------------- sharding
+
+def _fake_mesh(shape=(4, 2), axes=("data", "model")):
+    """AbstractMesh lets us test specs without 8 real devices."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(shape, axes)
+
+
+def test_param_pspecs_cover_tree():
+    cfg = get_config("mistral-nemo-12b")
+    mesh = _fake_mesh()
+    pol = Policy(cfg, mesh)
+    aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+    specs = pol.param_pspecs(aparams)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(jax.tree.leaves(aparams))
+    assert all(isinstance(s, P) for s in leaves)
+
+
+def test_param_specs_divisible():
+    """Every sharded dim divides by its mesh axes (the _fit guarantee)."""
+    for arch in ("qwen1.5-32b", "deepseek-v3-671b", "olmoe-1b-7b"):
+        cfg = get_config(arch)
+        mesh = _fake_mesh((16, 16))
+        pol = Policy(cfg, mesh)
+        aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                 jax.random.PRNGKey(0))
+        specs = pol.param_pspecs(aparams)
+
+        def check(leaf, spec):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([pol.sizes[a] for a in axes]))
+                assert dim % n == 0, (arch, leaf.shape, spec)
+        jax.tree.map(check, aparams, specs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_norms_replicated():
+    cfg = get_config("mistral-nemo-12b")
+    pol = Policy(cfg, _fake_mesh())
+    aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+    specs = pol.param_pspecs(aparams)
+    s = specs["final_norm"]["scale"]
+    assert tuple(s) == () or all(a is None for a in tuple(s))
+
+
+def test_cache_specs_long_vs_batch():
+    cfg = get_config("mistral-nemo-12b")
+    pol = Policy(cfg, _fake_mesh())
+    acache = jax.eval_shape(lambda: T.init_cache(cfg, 8, 64, jnp.bfloat16))
+    batch_specs = pol.cache_pspecs(acache, long=False)
+    long_specs = pol.cache_pspecs(acache, long=True)
+    kb = tuple(batch_specs["0"]["0"]["kv"]["k"])
+    kl = tuple(long_specs["0"]["0"]["kv"]["k"])
+    assert kb[1] is not None and kb[2] is None      # batch sharded
+    assert kl[1] is None and kl[2] is not None      # seq sharded
+
+
+def test_cache_plan_policy():
+    dense = get_config("mistral-nemo-12b")
+    jamba = get_config("jamba-v0.1-52b")
+    rwkv = get_config("rwkv6-1.6b")
+    deeps = get_config("deepseek-v3-671b")
+    long = SHAPES["long_500k"]
+    d32 = SHAPES["decode_32k"]
+    assert uses_window(dense, long) and not uses_window(dense, d32)
+    assert not uses_window(jamba, long)     # hybrid: native full attn
+    assert not uses_window(rwkv, long)      # attention-free
+    assert not uses_window(deeps, long)     # MLA latent
+    cl, w = cache_plan(dense, long)
+    assert cl == w == dense.long_context_window
+    cl, w = cache_plan(dense, d32)
+    assert cl == 32768 and w == 0
+
+
+def test_host_mesh_constrain_runs():
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    mesh = make_host_mesh()
+    pol = Policy(cfg, mesh)
+    with mesh:
+        x = jnp.zeros((2, 4, cfg.d_model))
+        y = pol.constrain(x)
+        assert y.shape == x.shape
+
+
+# ------------------------------------------------------ LLM serving
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_greedy_generation_deterministic(server):
+    cfg, params = server
+    srv = LLMServer(cfg, params, cache_len=64)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    r1 = srv.serve_one(Request("a", prompt, max_new_tokens=5))
+    srv2 = LLMServer(cfg, params, cache_len=64)
+    r2 = srv2.serve_one(Request("b", prompt, max_new_tokens=5))
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_prefix_cache_reuse_same_tokens(server):
+    """Second request extending a served prefix re-encodes only the
+    suffix AND produces identical continuations."""
+    cfg, params = server
+    prompt = np.arange(1, 11, dtype=np.int32)
+    ext = np.concatenate([prompt, np.array([3, 7], np.int32)])
+
+    srv = LLMServer(cfg, params, cache_len=64, enable_prefix_cache=True)
+    srv.serve_one(Request("warm", prompt, max_new_tokens=1))
+    r_hit = srv.serve_one(Request("hit", ext, max_new_tokens=6))
+    assert r_hit.prefix_hit and r_hit.prefill_tokens == 2
+
+    srv_cold = LLMServer(cfg, params, cache_len=64, enable_prefix_cache=False)
+    r_cold = srv_cold.serve_one(Request("cold", ext, max_new_tokens=6))
+    assert not r_cold.prefix_hit and r_cold.prefill_tokens == len(ext)
+    np.testing.assert_array_equal(r_hit.tokens, r_cold.tokens)
+
+
+def test_prefix_cache_exact_match(server):
+    cfg, params = server
+    prompt = np.arange(1, 9, dtype=np.int32)
+    srv = LLMServer(cfg, params, cache_len=64)
+    r1 = srv.serve_one(Request("a", prompt, max_new_tokens=4))
+    r2 = srv.serve_one(Request("b", prompt, max_new_tokens=4))
+    assert r2.prefix_hit
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_serving_ssm_arch():
+    """Prefix caching works identically for constant-state archs."""
+    cfg = reduced(get_config("rwkv6-1.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    srv = LLMServer(cfg, params, cache_len=64)
+    prompt = np.arange(1, 7, dtype=np.int32)
+    r1 = srv.serve_one(Request("a", prompt, max_new_tokens=3))
+    r2 = srv.serve_one(Request("b", np.concatenate([prompt, r1.tokens[:1]]),
+                               max_new_tokens=3))
+    assert r2.prefix_hit and r2.prefill_tokens == 1

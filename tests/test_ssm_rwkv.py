@@ -1,0 +1,96 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import rwkv as R
+from repro.models import ssm as S
+
+
+@pytest.fixture(scope="module")
+def jamba_cfg():
+    return reduced(get_config("jamba-v0.1-52b"), d_model=64)
+
+
+@pytest.fixture(scope="module")
+def rwkv_cfg():
+    return reduced(get_config("rwkv6-1.6b"), d_model=64)
+
+
+def test_mamba_decode_matches_forward(key, jamba_cfg):
+    cfg = jamba_cfg
+    p = S.mamba_init(key, cfg)
+    B, T = 2, 9
+    x = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    full, _ = S.mamba_forward(p, x, cfg)
+    cache = S.mamba_cache_init(cfg, B, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = S.mamba_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, full, atol=1e-4)
+
+
+def test_mamba_state_threading(key, jamba_cfg):
+    """forward(x) final state == decode-accumulated state."""
+    cfg = jamba_cfg
+    p = S.mamba_init(key, cfg)
+    x = jax.random.normal(key, (1, 6, cfg.d_model), jnp.float32)
+    _, (conv_f, h_f) = S.mamba_forward(p, x, cfg)
+    cache = S.mamba_cache_init(cfg, 1, jnp.float32)
+    for t in range(6):
+        _, cache = S.mamba_decode(p, x[:, t:t + 1], cache, cfg)
+    np.testing.assert_allclose(cache[1], h_f, atol=1e-4)
+    np.testing.assert_allclose(cache[0], conv_f, atol=1e-5)
+
+
+def test_mamba_causality(key, jamba_cfg):
+    cfg = jamba_cfg
+    p = S.mamba_init(key, cfg)
+    x = jax.random.normal(key, (1, 8, cfg.d_model), jnp.float32)
+    y1, _ = S.mamba_forward(p, x, cfg)
+    x2 = x.at[:, 5:].set(0.0)
+    y2, _ = S.mamba_forward(p, x2, cfg)
+    np.testing.assert_allclose(y1[:, :5], y2[:, :5], atol=1e-5)
+
+
+def test_rwkv_tmix_decode_consistency(key, rwkv_cfg):
+    cfg = rwkv_cfg
+    p = R.rwkv6_init(key, cfg)
+    B, T = 2, 7
+    x = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    full, (lx, st) = R.rwkv6_tmix(p, x, cfg)
+    state = None
+    x_prev = None
+    outs = []
+    for t in range(T):
+        o, (x_prev, state) = R.rwkv6_tmix(p, x[:, t:t + 1], cfg,
+                                          state=state, x_prev=x_prev)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, full, atol=1e-4)
+    np.testing.assert_allclose(state, st, atol=1e-4)
+
+
+def test_rwkv_cmix_shift(key, rwkv_cfg):
+    cfg = rwkv_cfg
+    p = R.cmix_init(key, cfg)
+    x = jax.random.normal(key, (1, 5, cfg.d_model), jnp.float32)
+    full, last = R.rwkv6_cmix(p, x, cfg)
+    x_prev = None
+    outs = []
+    for t in range(5):
+        o, x_prev = R.rwkv6_cmix(p, x[:, t:t + 1], cfg, x_prev=x_prev)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=1e-5)
+    np.testing.assert_allclose(x_prev, last, atol=1e-6)
+
+
+def test_rwkv_decay_in_unit_interval(key, rwkv_cfg):
+    cfg = rwkv_cfg
+    p = R.rwkv6_init(key, cfg)
+    x = jax.random.normal(key, (1, 4, cfg.d_model), jnp.float32) * 3
+    r, k, v, w, g = R._tmix_projections(p, x, x, cfg)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0

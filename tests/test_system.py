@@ -1,0 +1,128 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Train EMSNet on synthetic NEMSIS data, split it with EMSServe, stream a
+Table-6 episode through the engine, and check the serving stack end to
+end (tasks 1-5, caching, offloading, fault tolerance). Also lowers the
+dry-run step functions on a 1x1 host mesh to validate the spec
+machinery without the 512-device flag.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, reduced
+from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, EMSServe,
+                        HeartbeatMonitor, ProfileTable, emsnet_module,
+                        nlos_bandwidth, split, table6)
+from repro.core import medmath as MM
+from repro.data import synthetic_nemsis as D
+from repro.training import emsnet_trainer as ET
+
+
+@pytest.fixture(scope="module")
+def trained_system(tiny_emsnet_cfg):
+    """Train M1/M2/M3 on synthetic D1/D2, return split models + params."""
+    cfg = tiny_emsnet_cfg
+    d1 = D.generate(cfg, 1000, seed=0)
+    tr, _, te = D.splits(d1)
+    p1, _ = ET.train(cfg, D.loader(tr, 64, modalities=("text",)),
+                     modalities=("text",), steps=60)
+    p2, _ = ET.train(cfg, D.loader(tr, 64, modalities=("text", "vitals")),
+                     modalities=("text", "vitals"), steps=60)
+    d2 = D.generate(cfg, 300, seed=5, modal3=True)
+    tr2, _, _ = D.splits(d2)
+    p3, _ = ET.pmi_finetune(cfg, p2, D.loader(tr2, 32), steps=40)
+    mods = {"m1": emsnet_module(cfg, ("text",)),
+            "m2": emsnet_module(cfg, ("text", "vitals")),
+            "m3": emsnet_module(cfg, ("text", "vitals", "scene"))}
+    splits = {k: split(m) for k, m in mods.items()}
+    params = {"m1": p1, "m2": p2, "m3": p3}
+    return cfg, splits, params, te
+
+
+def _episode_payloads(cfg, te):
+    return {
+        "text": jnp.asarray(te.text[:1]),
+        "vitals": jnp.asarray(te.vitals[:1]),
+        "scene": jnp.asarray(te.scene[:1]),
+    }
+
+
+def test_e2e_episode_with_trained_models(trained_system):
+    """Full pipeline: episode stream -> recommendations -> med-math."""
+    cfg, splits, params, te = trained_system
+    payloads = _episode_payloads(cfg, te)
+    pol = AdaptiveOffloadPolicy(
+        ProfileTable(base={"enc:text": 0.05, "enc:vitals": 0.001,
+                           "enc:scene": 0.001, "tail": 0.001, "full": 0.06}),
+        HeartbeatMonitor(BandwidthTrace.static(nlos_bandwidth(5))))
+    eng = EMSServe(splits, params, policy=pol, cached=True)
+    eng.run_episode(table6()[1], lambda ev: payloads[ev.modality])
+
+    final = eng.records[-1].recommendation
+    assert final is not None
+    assert final["protocol_logits"].shape == (1, cfg.n_protocols)
+    assert final["medicine_logits"].shape == (1, cfg.n_medicines)
+    # tasks 4 & 5 post-processing on the quantity head output
+    qty = abs(float(final["quantity"][0])) + 0.5
+    dosage = MM.dosage_from_label(qty, "adrenaline")
+    assert dosage["dosage_ml"] > 0
+    # the model used at the end integrates all three modalities
+    assert eng.records[-1].model == "m3"
+
+
+def test_e2e_recommendations_track_model_upgrades(trained_system):
+    """As modalities arrive, the engine upgrades M1 -> M2 -> M3."""
+    cfg, splits, params, te = trained_system
+    payloads = _episode_payloads(cfg, te)
+    eng = EMSServe(splits, params, cached=True, real_time=True)
+    models_used = []
+    for ev in table6()[1]:
+        rec = eng.on_event(ev, payloads[ev.modality])
+        models_used.append(rec.model)
+    assert models_used[0] == "m1"          # speech only
+    assert models_used[1] == "m2"          # + vitals
+    assert models_used[-1] == "m3"         # + scene
+    assert eng.cache.hits > 0
+
+
+def test_e2e_accuracy_sanity(trained_system):
+    """Trained 2-modal model is far above chance on protocol selection."""
+    cfg, splits, params, te = trained_system
+    m = ET.evaluate(params["m2"], cfg, te, ("text", "vitals"))
+    assert m["protocol_top1"] > 5.0 / cfg.n_protocols
+
+
+def test_lowering_on_host_mesh():
+    """input_specs + jit.lower works for reduced archs on the 1x1 mesh
+    (the real 256/512-device lowering is covered by launch/dryrun.py)."""
+    from repro.distributed.sharding import Policy
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import input_specs
+    import dataclasses
+
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=64,
+                                global_batch=2)
+    mesh = make_host_mesh()
+    pol = Policy(cfg, mesh)
+    fn, args = input_specs(cfg, shape, pol)
+    with mesh:
+        compiled = jax.jit(fn).lower(*args).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_dryrun_artifacts_complete():
+    """The committed dry-run sweep covers all 40 pairs x 2 meshes OK."""
+    import json
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "benchmarks" / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    recs = [json.loads(p.read_text()) for p in art.glob("*.json")]
+    from repro.configs import ARCHS
+    ok = {(r["arch"], r["shape"], r["mesh"]) for r in recs if r["ok"]}
+    missing = [(a, s, m) for a in ARCHS for s in SHAPES
+               for m in ("single", "multi") if (a, s, m) not in ok]
+    assert not missing, f"missing/failed dry-runs: {missing[:5]}"
