@@ -13,8 +13,8 @@ import time
 import traceback
 
 SUITES = ("fig8_latency", "fig14_cache_speedup", "fig15_offloading",
-          "table3_accuracy", "table4_pmi", "table5_e2e", "kernels_bench",
-          "roofline_report")
+          "table3_accuracy", "table4_pmi", "table5_e2e", "serve_throughput",
+          "kernels_bench", "roofline_report")
 
 
 def main() -> None:

@@ -1,0 +1,195 @@
+"""Multi-session serving throughput: BatchedEMSServe vs looping the
+per-event EMSServe (the paper's single-responder engine) over N
+concurrent sessions.
+
+Workload: every session streams an EMS episode — symptom text first
+(paper Episode 1 ordering), then a vitals/scene mix whose vitals GROW
+one timestep per vitals event (aggregate=concat). Growing streams are
+the key property: the unbucketed per-event baseline meets a NEW input
+shape (and takes a fresh XLA compile) every few events for the entire
+life of an incident, while the bucketed engine's shape set is finite.
+
+Protocol (production-faithful): both engines run the first
+``warmup_ticks`` of every episode untimed — steady-state submodule
+programs and every (modality, bucket, batch) shape get compiled there.
+The timed window is the episode's continuation, where every vitals
+stream is longer than anything in history: the batched engine must add
+ZERO compiles there (the plateau criterion), while the baseline keeps
+recompiling — exactly what it would do in deployment.
+
+Reports (-> artifacts/BENCH_serving.json and CSV rows): sessions/sec
+and events/sec for both engines + speedup, p50/p99 per-event latency
+under the batched engine, XLA compile counts and the per-tick compile
+trace over the timed window.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from . import common as C
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+TEXT_LENS = (6, 12, 24, 31)       # per-session utterance lengths -> buckets
+
+
+def _episodes(n_sessions, n_ticks, cfg, seed=0):
+    """Deterministic prefix [text, vitals, scene] (so every modality,
+    model, and bucket is exercised during warmup), then a seeded
+    vitals/scene mix."""
+    from repro.core.episodes import Event
+    rng = np.random.default_rng(seed)
+    eps, payloads = {}, {}
+    for i in range(n_sessions):
+        sid = f"s{i}"
+        kinds = ["text", "vitals", "scene"] + rng.choice(
+            ["vitals", "scene"], size=max(0, n_ticks - 3), p=(0.55, 0.45)
+        ).tolist()
+        eps[sid] = [Event(t, k, float(t)) for t, k in enumerate(kinds[:n_ticks])]
+        text_len = min(TEXT_LENS[i % len(TEXT_LENS)], cfg.max_text_len)
+        p = C.sample_payloads(cfg, seed=seed + i)
+        payloads[sid] = {
+            "text": p["text"][:, :text_len],
+            "vitals": p["vitals"][:, :1],          # ONE new timestep per event
+            "scene": p["scene"],
+        }
+    return eps, payloads
+
+
+def _aggregate(old, new):
+    """Vitals extend the time series; other modalities replace."""
+    import jax.numpy as jnp
+    if old is not None and new.ndim == 3:
+        return jnp.concatenate([old, new], axis=1)
+    return new
+
+
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
+    from repro.core import Bucketer, EMSServe
+    from repro.serving.batch_engine import BatchedEMSServe
+
+    n_sessions = n_sessions or (8 if quick else 32)
+    n_ticks = n_ticks or (16 if quick else 48)
+    if n_ticks <= warmup_ticks:
+        raise SystemExit(f"--ticks must exceed the warmup window "
+                         f"({warmup_ticks}); got {n_ticks}")
+    cfg = C.emsnet_cfg(quick)
+    # separate split sets so each engine has its own jit caches and the
+    # reported compile counts are per-engine, not shared
+    splits, params = C.build_split_models(cfg)
+    splits_b, params_b = C.build_split_models(cfg)
+    eps, payloads = _episodes(n_sessions, n_ticks, cfg)
+    # vitals: sliding window of the 8 most recent samples (bounded
+    # memory for an unbounded stream); text: padded to its bucket
+    max_buckets = {"vitals": 8, "text": cfg.max_text_len}
+
+    def payload_fn(sid, ev):
+        return payloads[sid][ev.modality]
+
+    # ------- baseline: loop the per-event engine, one session at a time
+    base_wall = 0.0
+    base_compiles_start = base_compiles_end = 0
+    engines = {sid: EMSServe(splits, params, cached=True, real_time=True)
+               for sid in eps}
+    for sid, events in eps.items():                      # warmup window
+        for ev in events[:warmup_ticks]:
+            engines[sid].on_event(ev, payload_fn(sid, ev),
+                                  aggregate=_aggregate)
+    base_compiles_start = next(iter(engines.values())).compile_count()
+    t0 = time.perf_counter()
+    for sid, events in eps.items():                      # timed window
+        for ev in events[warmup_ticks:]:
+            engines[sid].on_event(ev, payload_fn(sid, ev),
+                                  aggregate=_aggregate)
+    base_wall = time.perf_counter() - t0
+    base_compiles_end = next(iter(engines.values())).compile_count()
+    n_timed_events = sum(len(ev) - warmup_ticks for ev in eps.values())
+
+    # ------- batched, bucketed, dispatch-async engine
+    beng = BatchedEMSServe(splits_b, params_b,
+                           bucketer=Bucketer(max_buckets=max_buckets),
+                           batch_bucket_min=min(8, n_sessions))
+
+    def tick(t):
+        for sid, events in eps.items():
+            if t < len(events):
+                beng.submit(sid, events[t], payload_fn(sid, events[t]),
+                            aggregate=_aggregate)
+        beng.flush()
+
+    for t in range(warmup_ticks):                        # warmup window
+        tick(t)
+    warm_flushes = len(beng.flushes)
+    compile_trace = [beng.compile_count()]
+    t0 = time.perf_counter()
+    for t in range(warmup_ticks, n_ticks):               # timed window
+        tick(t)
+        compile_trace.append(beng.compile_count())
+    batch_wall = time.perf_counter() - t0
+
+    lats = [lat for f in beng.flushes[warm_flushes:]
+            for lat in f.latencies.values()]
+    result = {
+        "n_sessions": n_sessions,
+        "n_ticks": n_ticks,
+        "warmup_ticks": warmup_ticks,
+        "timed_events": n_timed_events,
+        "baseline": {
+            "wall_s": base_wall,
+            "sessions_per_s": n_sessions / base_wall,
+            "events_per_s": n_timed_events / base_wall,
+            "xla_compiles_during_timed": base_compiles_end - base_compiles_start,
+            "xla_compiles_total": base_compiles_end,
+        },
+        "batched": {
+            "wall_s": batch_wall,
+            "sessions_per_s": n_sessions / batch_wall,
+            "events_per_s": n_timed_events / batch_wall,
+            "xla_compiles_during_timed": compile_trace[-1] - compile_trace[0],
+            "xla_compiles_total": compile_trace[-1],
+            "p50_event_latency_ms": _pctl(lats, 50) * 1e3,
+            "p99_event_latency_ms": _pctl(lats, 99) * 1e3,
+            "encoder_calls": sum(f.n_encoder_calls for f in beng.flushes),
+            "tail_calls": sum(f.n_tail_calls for f in beng.flushes),
+        },
+        "speedup": base_wall / batch_wall,
+        "compile_trace_timed": compile_trace,
+        "buckets": {f"{m}:{b}": n
+                    for (m, b), n in sorted(beng.bucketer.histogram.items())},
+    }
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "BENCH_serving.json").write_text(json.dumps(result, indent=2))
+
+    C.csv_row("serve_batched_per_session", batch_wall / n_sessions * 1e6,
+              f"sessions_per_s={result['batched']['sessions_per_s']:.2f};"
+              f"speedup={result['speedup']:.2f}x;"
+              f"compiles_timed={result['batched']['xla_compiles_during_timed']}")
+    C.csv_row("serve_baseline_per_session", base_wall / n_sessions * 1e6,
+              f"sessions_per_s={result['baseline']['sessions_per_s']:.2f};"
+              f"compiles_timed={result['baseline']['xla_compiles_during_timed']}")
+    C.csv_row("serve_event_latency_p99",
+              result["batched"]["p99_event_latency_ms"] * 1e3,
+              f"p50_ms={result['batched']['p50_event_latency_ms']:.2f}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--ticks", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    r = run(quick=not args.full, n_sessions=args.sessions,
+            n_ticks=args.ticks)
+    print(json.dumps(r, indent=2))

@@ -132,10 +132,13 @@ def _dot_flops(comp: Computation, op: Op) -> float:
     numel = 1
     for d in rshapes[0][1]:
         numel *= d
-    m = re.match(r"\s*%?([\w.\-]+)", op.rest)
+    # compiled HLO prints operands with inline types ("dot(f32[4,16]{1,0}
+    # %gte.4, ...)"); prefer that shape, else resolve the bare name
+    m = re.match(r"\s*(?:([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)",
+                 op.rest)
     contracted = 1
     if m:
-        lhs_shape = comp.symbols.get(m.group(1), "")
+        lhs_shape = m.group(1) or comp.symbols.get(m.group(2), "")
         _, lshapes = _shape_info(lhs_shape)
         cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
         if lshapes and cd:

@@ -32,6 +32,11 @@ class EMSNetConfig:
     # training
     dropout: float = 0.0
     dtype: str = "float32"
+    # text-attention backend: route _bert_block through the Pallas
+    # flash kernel (key-padding-masked). flash_interpret=True runs the
+    # kernel body on CPU (this container); set False on real TPUs.
+    use_flash_text: bool = False
+    flash_interpret: bool = True
 
     @property
     def text_dims(self) -> Tuple[int, int, int, int]:

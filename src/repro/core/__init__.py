@@ -1,6 +1,7 @@
 """The paper's primary contribution: EMSServe — modality-aware model
 splitting, per-modality feature caching, and adaptive edge offloading
 for asynchronously-arriving multimodal EMS data."""
+from .bucketing import Bucketer, bucket_length, next_pow2  # noqa: F401
 from .engine import EMSServe, EventRecord  # noqa: F401
 from .episodes import Event, random_episode, table6  # noqa: F401
 from .feature_cache import FeatureCache, StalenessError  # noqa: F401

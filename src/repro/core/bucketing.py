@@ -1,0 +1,120 @@
+"""Shape bucketing: bounded static shapes for variable-length inputs.
+
+XLA compiles one program per input shape. An EMS episode grows its
+vitals time series with every event and text utterances vary in token
+count, so serving them at their natural shapes recompiles the encoders
+over and over — the dominant cost on the serving hot path. The bucketer
+pads every variable-length input up to the next power-of-two length
+(floored at ``min_bucket``, clamped at ``max_bucket``) so each encoder
+only ever sees O(log max_len) distinct shapes and the recompile count
+plateaus after warmup.
+
+Padding must not change the math:
+  * text: PAD id 0 — the text encoder already key-masks ``tokens > 0``
+    and mean-pools over the same mask;
+  * vitals: zero-padded timesteps plus an explicit ``len`` vector; the
+    recurrent encoders freeze their carry on padded steps (see
+    ``models.emsnet.vitals_encoder``), so the final state equals the
+    unpadded run's;
+  * batch axis (multi-session coalescing): rows above ``n`` are
+    zero/PAD rows the caller slices away.
+
+Inputs longer than ``max_bucket`` are cropped to it: vitals keep their
+most recent steps (a sliding window; NEMSIS caps at 30 per event
+anyway), text keeps its leading tokens (the valid prefix).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def bucket_length(n: int, *, min_bucket: int = 8,
+                  max_bucket: Optional[int] = None) -> int:
+    b = max(min_bucket, next_pow2(n))
+    if max_bucket is not None:
+        # the cap itself is the top bucket (NOT rounded up: a
+        # non-power-of-two cap like max_text_len=48 must never produce
+        # inputs longer than the positional table)
+        b = min(b, max_bucket)
+    return b
+
+
+def pad_axis(x, length: int, axis: int, pad_value=0, keep: str = "tail"):
+    """Pad ``axis`` to ``length``; when cropping keep the trailing
+    (``keep="tail"``, for streams where the recent window matters) or
+    leading (``keep="head"``, for right-padded sequences whose valid
+    prefix must survive) slice."""
+    n = x.shape[axis]
+    if n == length:
+        return x
+    if n > length:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = (slice(n - length, n) if keep == "tail"
+                     else slice(0, length))
+        return x[tuple(idx)]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, length - n)
+    return jnp.pad(x, widths, constant_values=pad_value)
+
+
+@dataclass
+class Bucketer:
+    """Pads per-modality payloads to bucketed lengths.
+
+    ``fit`` returns the exact pytree the (mask-aware) encoders consume:
+      * text  (B, S) int32  -> (B, S_b) int32, PAD=0
+      * vitals (B, T, n)    -> {"x": (B, T_b, n), "len": (B,) int32}
+      * anything fixed-size -> passthrough
+    """
+    min_bucket: int = 8
+    max_buckets: Dict[str, int] = field(default_factory=dict)
+    # (modality, bucket) -> times served; bounded <=> compiles bounded
+    histogram: Dict[tuple, int] = field(default_factory=dict)
+
+    def bucket(self, modality: str, n: int) -> int:
+        return bucket_length(n, min_bucket=self.min_bucket,
+                             max_bucket=self.max_buckets.get(modality))
+
+    def _count(self, modality: str, b: int):
+        key = (modality, b)
+        self.histogram[key] = self.histogram.get(key, 0) + 1
+
+    def fit(self, modality: str, x):
+        if modality == "text":
+            b = self.bucket(modality, x.shape[1])
+            self._count(modality, b)
+            # valid tokens are a prefix (PAD suffix): keep the head so a
+            # crop drops PAD, not the utterance
+            return pad_axis(x, b, axis=1, keep="head")
+        if modality == "vitals":
+            T = x.shape[1]
+            b = self.bucket(modality, T)
+            self._count(modality, b)
+            return {"x": pad_axis(x, b, axis=1),
+                    "len": jnp.full((x.shape[0],), min(T, b), jnp.int32)}
+        return x
+
+    def n_buckets(self) -> int:
+        return len(self.histogram)
+
+
+def stack_bucketed(payloads, batch_bucket: int):
+    """Coalesce per-session payloads (each batch dim 1, same bucketed
+    length) into one batch of ``batch_bucket`` rows; surplus rows are
+    zero/PAD padding (zero ``len`` for masked-vitals dicts, so padded
+    rows encode to the zero initial state). Returns the stacked pytree;
+    row i -> session i for the first ``len(payloads)`` rows."""
+    if isinstance(payloads[0], dict):
+        keys = payloads[0].keys()
+        return {k: pad_axis(jnp.concatenate([p[k] for p in payloads], axis=0),
+                            batch_bucket, axis=0)
+                for k in keys}
+    x = jnp.concatenate(list(payloads), axis=0)
+    return pad_axis(x, batch_bucket, axis=0)

@@ -30,10 +30,11 @@ from typing import Dict, List, Optional
 
 import jax
 
+from .bucketing import Bucketer
 from .episodes import Event
 from .feature_cache import FeatureCache
 from .offload import AdaptiveOffloadPolicy
-from .splitter import SplitModel
+from .splitter import SplitModel, select_model
 
 
 @dataclass
@@ -54,7 +55,7 @@ class EMSServe:
     def __init__(self, models: Dict[str, SplitModel], params: Dict[str, dict],
                  *, policy: Optional[AdaptiveOffloadPolicy] = None,
                  cached: bool = True, real_time: bool = False,
-                 session: str = "s0"):
+                 session: str = "s0", bucketer: Optional[Bucketer] = None):
         # models keyed by name, e.g. {"m1": text-only, "m2": text+vitals, ...}
         self.models = models
         self.params = params
@@ -62,12 +63,16 @@ class EMSServe:
         self.cached = cached
         self.real_time = real_time
         self.session = session
+        # bucketer: pad variable-length inputs to power-of-two shapes so
+        # encoder recompiles plateau as the vitals stream grows
+        self.bucketer = bucketer
         self.cache = FeatureCache(max_staleness=1)
         self.inputs: Dict[str, object] = {}
         self.input_step: Dict[str, int] = {}
         self.step = 0
         self.clock = 0.0
         self.records: List[EventRecord] = []
+        self._cum_total = 0.0            # running sum of record.total_s
         self.edge_alive = True
 
     # ------------------------------------------------------------ utils
@@ -80,12 +85,15 @@ class EMSServe:
             self.policy.force = "glass"
 
     def _select_model(self, observed):
-        best, best_n = None, -1
-        for name, sm in self.models.items():
-            mods = set(sm.modalities())
-            if mods <= observed and len(mods) > best_n:
-                best, best_n = name, len(mods)
-        return best
+        return select_model(self.models, observed)
+
+    def _enc_input(self, modality: str):
+        """Aggregated input for an encoder call, bucketed when enabled."""
+        x = self.inputs[modality]
+        return self.bucketer.fit(modality, x) if self.bucketer else x
+
+    def compile_count(self) -> int:
+        return sum(sm.compile_count() for sm in self.models.values())
 
     def _decide(self, submodule: str, payload_bytes: int):
         if self.policy is None:
@@ -134,9 +142,10 @@ class EMSServe:
                          if consumers else 1 << 16)
             tier_used, dt = self._decide(f"enc:{m}", payload_b)
             dt_total += dt
+            enc_in = self._enc_input(m)
             for name, sm in consumers:
                 feat, secs = self._run(sm.encoders[m], self.params[name],
-                                       self.inputs[m],
+                                       enc_in,
                                        submodule=f"enc:{m}", tier=tier_used)
                 self.cache.put(f"{self.session}:{name}", m, feat,
                                step=self.step, tier=tier_used)
@@ -166,7 +175,7 @@ class EMSServe:
                                 for mm in sm.modalities())
                 tier_used, dt = self._decide("full", payload_b)
                 dt_total += dt
-                batch = {mm: self.inputs[mm] for mm in sm.modalities()}
+                batch = {mm: self._enc_input(mm) for mm in sm.modalities()}
                 rec_out, secs = self._run(sm.full, self.params[model_name],
                                           batch, submodule="full",
                                           tier=tier_used)
@@ -177,17 +186,18 @@ class EMSServe:
                 for name, sm in self.models.items():
                     if m in sm.modalities():
                         _, secs = self._run(sm.encoders[m], self.params[name],
-                                            self.inputs[m],
+                                            self._enc_input(m),
                                             submodule=f"enc:{m}", tier="glass")
                         compute_s += secs
                         break
 
         total = dt_total + compute_s
         self.clock = max(self.clock, event.arrival_time) + total
+        self._cum_total += total        # O(1), was O(n) per event
         rec = EventRecord(
             index=event.index, modality=m, model=model_name, tier=tier_used,
             delta_t=dt_total, compute_s=compute_s, total_s=total,
-            cumulative_s=sum(r.total_s for r in self.records) + total,
+            cumulative_s=self._cum_total,
             recommendation=(jax.tree.map(lambda a: a, rec_out)
                             if rec_out is not None else None),
             cache_hits=self.cache.hits - hits0)

@@ -22,6 +22,9 @@ class MultimodalModule:
     init_fn: Callable                          # fn(key) -> params
     # representative input sizes in bytes, used by the offloading policy
     payload_bytes: Dict[str, int] = field(default_factory=dict)
+    # hard per-modality input-length caps (e.g. a positional-embedding
+    # table); the serving bucketer must never pad past these
+    max_lengths: Dict[str, int] = field(default_factory=dict)
 
     def full_fn(self):
         """The monolithic forward — what a conventional framework runs."""
@@ -53,4 +56,6 @@ def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModu
             params["heads"], feats, modalities),
         init_fn=lambda key: E.init_params(cfg, key, modalities),
         payload_bytes={m: payload[m] for m in modalities},
+        max_lengths=({"text": cfg.max_text_len} if "text" in modalities
+                     else {}),
     )

@@ -32,6 +32,27 @@ class SplitModel:
     def modalities(self):
         return self.module.modalities
 
+    def compile_count(self) -> int:
+        """Total XLA compilations across this model's jitted callables —
+        the number the shape bucketer bounds. Non-jitted splits report 0."""
+        n = 0
+        for fn in (*self.encoders.values(), self.tail, self.full):
+            size = getattr(fn, "_cache_size", None)
+            n += size() if callable(size) else 0
+        return n
+
+
+def select_model(models: Dict[str, SplitModel], observed) -> str | None:
+    """EMSServe's model-selection rule (paper §4.2): the model consuming
+    the most modalities whose inputs have all been observed. Shared by
+    the per-event and batched engines so their recommendations agree."""
+    best, best_n = None, -1
+    for name, sm in models.items():
+        mods = set(sm.modalities())
+        if mods <= set(observed) and len(mods) > best_n:
+            best, best_n = name, len(mods)
+    return best
+
 
 def split(module: MultimodalModule, *, jit: bool = True) -> SplitModel:
     wrap = jax.jit if jit else (lambda f: f)

@@ -43,6 +43,17 @@ def axis_sizes(mesh):
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def abstract_mesh(shape, axes):
+    """Device-free mesh for spec construction/testing, across the
+    AbstractMesh signature change: older jax takes ``(shape, axis_names)``
+    positionally; 0.4.35+ takes one ``((name, size), ...)`` tuple."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
+
+
 class Policy:
     """``tuned=False`` is the naive paper-faithful baseline recorded in
     EXPERIMENTS.md §Roofline; ``tuned=True`` applies the §Perf hillclimb

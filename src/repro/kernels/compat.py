@@ -1,0 +1,13 @@
+"""Version-compat shims for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back again across releases); the installed 0.4.x line only has the
+``TPU``-prefixed spelling. Every kernel imports ``CompilerParams`` from
+here so the rename never touches kernel code again.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

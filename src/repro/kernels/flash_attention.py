@@ -27,11 +27,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, causal, window, bq, bk, seq_k, n_kv_blocks, q_offset):
+def _kernel(q_ref, k_ref, v_ref, *refs,
+            scale, causal, window, bq, bk, seq_k, n_kv_blocks, q_offset,
+            has_lengths):
+    if has_lengths:
+        len_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        len_ref, (o_ref, m_ref, l_ref, acc_ref) = None, refs
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -48,7 +55,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = k_pos < seq_k                              # kv padding
+    # kv padding: block padding, or the row's true key count
+    mask = k_pos < (len_ref[0, 0] if has_lengths else seq_k)
     if causal:
         mask &= k_pos <= q_pos
     if window:
@@ -57,7 +65,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
+    # re-mask after the shift: when every key so far is masked
+    # (m_new == NEG_INF) the subtraction above yields exp(0) = 1, which
+    # would let zero-length rows attend uniformly instead of outputting 0.
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
     v = v_ref[0].astype(jnp.float32)                  # (bk, Dv)
@@ -72,8 +83,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
-                    block_q=128, block_k=128, interpret=False):
-    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Returns (B, Sq, H, Dv)."""
+                    kv_lengths=None, block_q=128, block_k=128,
+                    interpret=False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Returns (B, Sq, H, Dv).
+
+    ``kv_lengths``: optional (B,) int32 per-row key count — keys at
+    positions >= kv_lengths[b] are masked out (key-padding mask for
+    length-bucketed batches). A zero-length row outputs exactly 0.
+    Non-causal only: the causal q/k alignment would need a per-row
+    offset, which no caller needs yet.
+    """
+    if causal and kv_lengths is not None:
+        raise NotImplementedError(
+            "kv_lengths requires causal=False (per-row causal alignment "
+            "is not implemented)")
     B, Sq, H, D = q.shape
     _, Sk, KV, Dv = v.shape
     G = H // KV
@@ -100,16 +123,25 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
 
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
-        seq_k=Sk, n_kv_blocks=nk, q_offset=(Sk - Sq) if causal else 0)
+        seq_k=Sk, n_kv_blocks=nk, q_offset=(Sk - Sq) if causal else 0,
+        has_lengths=kv_lengths is not None)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        pl.BlockSpec((1, bk, D), kv_index),
+        pl.BlockSpec((1, bk, Dv), kv_index),
+    ]
+    operands = [qr, kr, vr]
+    if kv_lengths is not None:
+        # one (1, 1) scalar block per (batch, head) program
+        lr = jnp.repeat(kv_lengths.astype(jnp.int32), H)[:, None]
+        in_specs.append(pl.BlockSpec((1, 1), lambda bh, qi, ki: (bh, 0)))
+        operands.append(lr)
 
     out = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, D), kv_index),
-            pl.BlockSpec((1, bk, Dv), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, Dv), lambda bh, qi, ki: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, Dv), q.dtype),
         scratch_shapes=[
@@ -117,9 +149,9 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, Dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qr, kr, vr)
+    )(*operands)
     out = out[:, :Sq].reshape(B, H, Sq, Dv)
     return jnp.moveaxis(out, 1, 2)

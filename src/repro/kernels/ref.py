@@ -7,8 +7,14 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
-    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Materialized softmax."""
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                  kv_lengths=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Materialized softmax.
+    ``kv_lengths``: optional (B,) per-row valid-key count (key-padding
+    mask, non-causal only — mirrors the kernel); a zero-length row
+    outputs exactly 0."""
+    if causal and kv_lengths is not None:
+        raise NotImplementedError("kv_lengths requires causal=False")
     B, Sq, H, D = q.shape
     _, Sk, KV, Dv = v.shape
     G = H // KV
@@ -24,8 +30,12 @@ def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
         mask &= k_pos <= q_pos
     if window:
         mask &= q_pos - k_pos < window
-    s = jnp.where(mask[None, None, None], s, -1e30)
-    w = jax.nn.softmax(s, axis=-1)
+    mask = jnp.broadcast_to(mask[None, None, None], s.shape)
+    if kv_lengths is not None:
+        valid = k_pos[None] < kv_lengths[:, None, None]        # (B, 1, Sk)
+        mask &= valid[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    w = jnp.where(mask, jax.nn.softmax(s, axis=-1), 0.0)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, Dv).astype(q.dtype)
 

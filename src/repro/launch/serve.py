@@ -1,9 +1,12 @@
 """EMSServe serving launcher: run Table-6 episodes through the engine
 with adaptive offloading, feature caching, and (optionally) an edge
-crash, printing the per-event trace.
+crash, printing the per-event trace. ``--batched N`` instead serves N
+concurrent sessions through the coalescing BatchedEMSServe fast path
+and prints per-flush stats.
 
   PYTHONPATH=src python -m repro.launch.serve --episode 1 --mobility
   PYTHONPATH=src python -m repro.launch.serve --episode 2 --no-cache
+  PYTHONPATH=src python -m repro.launch.serve --batched 8
 """
 from __future__ import annotations
 
@@ -48,16 +51,39 @@ def main():
     ap.add_argument("--mobility", action="store_true",
                     help="walk 0->30->0 m during the episode (scenario 3)")
     ap.add_argument("--crash-edge-at", type=int, default=-1)
+    ap.add_argument("--batched", type=int, default=0, metavar="N",
+                    help="serve N concurrent sessions via BatchedEMSServe")
     args = ap.parse_args()
 
     from repro.configs.emsnet import config as emsnet_config
-    from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, EMSServe,
-                            HeartbeatMonitor, ProfileTable, nlos_bandwidth,
-                            profile, table6)
+    from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, Bucketer,
+                            EMSServe, HeartbeatMonitor, ProfileTable,
+                            nlos_bandwidth, profile, table6)
 
     cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
     splits, params = build_models(cfg)
     payloads = sample_payloads(cfg)
+
+    if args.batched:
+        from repro.serving.batch_engine import BatchedEMSServe
+        beng = BatchedEMSServe(
+            splits, params,
+            bucketer=Bucketer(max_buckets={"vitals": cfg.vitals_len,
+                                           "text": cfg.max_text_len}),
+            batch_bucket_min=min(8, args.batched))
+        eps = {f"s{i}": table6()[1 + i % 3] for i in range(args.batched)}
+        beng.run_episodes(eps, lambda sid, ev: payloads[ev.modality])
+        for i, f in enumerate(beng.flushes):
+            print(f"flush[{i:2d}] events={f.n_events:3d} "
+                  f"enc_calls={f.n_encoder_calls} tail_calls={f.n_tail_calls} "
+                  f"wall={f.wall_s*1e3:7.2f}ms")
+        lats = sorted(beng.event_latencies())
+        print(f"\n{args.batched} sessions, {beng.events_total} events in "
+              f"{beng.total_wall_s()*1e3:.1f} ms compute "
+              f"(p50 latency {lats[len(lats)//2]*1e3:.1f} ms, "
+              f"XLA compiles {beng.compile_count()}, "
+              f"cache entries {len(beng.cache)})")
+        return
 
     base = profile(splits["m3"], params["m3"], payloads)
     base["full"] = base["full"]

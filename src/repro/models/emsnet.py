@@ -55,16 +55,25 @@ def text_encoder_init(key, cfg: EMSNetConfig):
     }
 
 
-def _bert_block(p, x, mask, heads):
+def _bert_block(p, x, mask, heads, *, flash=None):
+    """``flash=(kv_lengths, interpret)`` routes attention through the
+    Pallas flash kernel (key-padding-masked, non-causal); None keeps the
+    materialized einsum path. Both see the same qkv/wo projections."""
     B, S, d = x.shape
     hd = d // heads
     h = L.layernorm(p["ln1"], x)
     qkv = L.dense(p["wqkv"], h).reshape(B, S, 3, heads, hd)
     q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
-    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
-    att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, d)
+    if flash is not None:
+        from repro.kernels.flash_attention import flash_attention
+        kv_lengths, interpret = flash
+        att = flash_attention(q, k, v, causal=False, kv_lengths=kv_lengths,
+                              interpret=interpret).reshape(B, S, d)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, d)
     x = x + L.dense(p["wo"], att)
     h = L.layernorm(p["ln2"], x)
     x = x + L.dense(p["w2"], jax.nn.gelu(L.dense(p["w1"], h)))
@@ -72,13 +81,20 @@ def _bert_block(p, x, mask, heads):
 
 
 def text_encoder(p, cfg: EMSNetConfig, tokens):
-    """tokens: (B, S) int32, 0 = PAD. Returns F_T (B, d_text)."""
+    """tokens: (B, S) int32, 0 = PAD. Returns F_T (B, d_text).
+
+    The flash path assumes PAD-only suffixes (valid tokens first), which
+    both the tokenizer layout and the bucketer's right-padding guarantee;
+    the einsum path handles arbitrary masks.
+    """
     _, d, heads, _ = cfg.text_dims
     mask = tokens > 0
     S = tokens.shape[1]
+    flash = ((mask.sum(-1).astype(jnp.int32), cfg.flash_interpret)
+             if cfg.use_flash_text else None)
     x = L.embed(p["tok"], tokens) + p["pos"]["emb"][None, :S]
     for blk in p["blocks"]:
-        x = _bert_block(blk, x, mask, heads)
+        x = _bert_block(blk, x, mask, heads, flash=flash)
     x = L.layernorm(p["ln"], x)
     m = mask[..., None].astype(x.dtype)
     return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
@@ -99,7 +115,14 @@ def vitals_encoder_init(key, cfg: EMSNetConfig):
 
 
 def vitals_encoder(p, cfg: EMSNetConfig, vitals):
-    """vitals: (B, T, n_vitals) float. Returns F_V (B, vitals_hidden)."""
+    """vitals: (B, T, n_vitals) float, or a bucketed payload
+    ``{"x": (B, T_b, n_vitals), "len": (B,) int32}`` (zero-padded to a
+    length bucket). Returns F_V (B, vitals_hidden). On padded steps the
+    recurrence freezes its carry, so the final state is bit-identical to
+    running the unpadded series."""
+    length = None
+    if isinstance(vitals, dict):
+        vitals, length = vitals["x"], vitals["len"]
     B, T, _ = vitals.shape
     h = cfg.vitals_hidden
     kind = cfg.vitals_encoder
@@ -130,13 +153,22 @@ def vitals_encoder(p, cfg: EMSNetConfig, vitals):
 
     xs = jnp.moveaxis(x_proj, 1, 0)                  # (T, B, gates*h)
     h0 = jnp.zeros((B, h), vitals.dtype)
-    if kind == "lstm":
-        (hT, _), _ = jax.lax.scan(lstm_step, (h0, h0), xs)
-    elif kind == "gru":
-        hT, _ = jax.lax.scan(gru_step, h0, xs)
+    step = {"lstm": lstm_step, "gru": gru_step, "rnn": rnn_step}[kind]
+    init = (h0, h0) if kind == "lstm" else h0
+    if length is None:
+        carry, _ = jax.lax.scan(step, init, xs)
     else:
-        hT, _ = jax.lax.scan(rnn_step, h0, xs)
-    return hT
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (T, B, 1), 0)
+                 < length[None, :, None])            # (T, B, 1)
+
+        def masked_step(carry, inp):
+            xt, vt = inp
+            new, _ = step(carry, xt)
+            return jax.tree.map(lambda n, o: jnp.where(vt, n, o),
+                                new, carry), None
+
+        carry, _ = jax.lax.scan(masked_step, init, (xs, valid))
+    return carry[0] if kind == "lstm" else carry
 
 
 # ----------------------------------------------------------------------

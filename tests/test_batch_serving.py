@@ -1,0 +1,240 @@
+"""Shape bucketing + BatchedEMSServe: padding must not change the math,
+coalesced multi-session serving must match the per-event engine, and the
+compile count must plateau once the bucket grid is warm."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.emsnet import tiny
+from repro.core import (Bucketer, EMSServe, bucket_length, emsnet_module,
+                        next_pow2, split, table6)
+from repro.core.bucketing import pad_axis, stack_bucketed
+from repro.core.episodes import Event
+from repro.models import emsnet as E
+from repro.serving.batch_engine import BatchedEMSServe
+
+
+# ------------------------------------------------------------ bucketing
+
+def test_bucket_length_grid():
+    assert next_pow2(1) == 1 and next_pow2(5) == 8 and next_pow2(8) == 8
+    assert bucket_length(3) == 8                      # min_bucket floor
+    assert bucket_length(9) == 16
+    assert bucket_length(100, max_bucket=16) == 16    # clamp
+    # distinct buckets for n in 1..64 is O(log): bounded compile count
+    assert len({bucket_length(n, max_bucket=64) for n in range(1, 65)}) <= 4
+
+
+def test_pad_axis_pads_and_crops():
+    x = jnp.arange(6).reshape(1, 6)
+    assert pad_axis(x, 8, axis=1).shape == (1, 8)
+    # crop keeps the trailing (most recent) slice
+    np.testing.assert_array_equal(pad_axis(x, 3, axis=1)[0], [3, 4, 5])
+
+
+def test_bucketer_payloads():
+    b = Bucketer(min_bucket=4, max_buckets={"vitals": 8})
+    toks = b.fit("text", jnp.ones((1, 5), jnp.int32))
+    assert toks.shape == (1, 8) and int(toks[0, -1]) == 0
+    vit = b.fit("vitals", jnp.ones((1, 13, 6)))
+    assert vit["x"].shape == (1, 8, 6) and int(vit["len"][0]) == 8
+    assert b.n_buckets() == 2
+    # text crops keep the valid prefix, not the PAD suffix
+    b2 = Bucketer(min_bucket=4, max_buckets={"text": 4})
+    t = b2.fit("text", jnp.asarray([[1, 2, 3, 0, 0, 0]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(t[0]), [1, 2, 3, 0])
+
+
+def test_stack_bucketed_rows():
+    rows = [{"x": jnp.ones((1, 4, 2)), "len": jnp.array([3], jnp.int32)}
+            for _ in range(3)]
+    s = stack_bucketed(rows, 4)
+    assert s["x"].shape == (4, 4, 2) and int(s["len"][3]) == 0
+
+
+@pytest.mark.parametrize("kind", ["rnn", "gru", "lstm"])
+def test_masked_vitals_encoder_equals_unpadded(kind):
+    cfg = tiny(vitals_encoder=kind)
+    p = E.vitals_encoder_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.n_vitals))
+    want = E.vitals_encoder(p, cfg, x)
+    got = E.vitals_encoder(p, cfg, Bucketer().fit("vitals", x))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# -------------------------------------------------- Pallas text encoder
+
+def test_flash_text_encoder_matches_einsum_padded_batch():
+    """Acceptance: fused text path within 1e-3 of the einsum reference
+    on a padded batch (variable lengths incl. an all-PAD row)."""
+    cfg = tiny()
+    p = E.text_encoder_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = np.zeros((4, cfg.max_text_len), np.int32)
+    for i, n in enumerate([cfg.max_text_len, 9, 3, 0]):
+        toks[i, :n] = rng.integers(1, cfg.vocab_size, n)
+    toks = jnp.asarray(toks)
+    want = E.text_encoder(p, cfg, toks)
+    got = E.text_encoder(p, dataclasses.replace(cfg, use_flash_text=True),
+                         toks)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+# --------------------------------------------------- batched engine
+
+@pytest.fixture(scope="module")
+def models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    key = jax.random.PRNGKey(0)
+    mods = {
+        "m1": emsnet_module(cfg, ("text",)),
+        "m2": emsnet_module(cfg, ("text", "vitals")),
+        "m3": emsnet_module(cfg, ("text", "vitals", "scene")),
+    }
+    splits = {k: split(m) for k, m in mods.items()}
+    params = {k: m.init_fn(jax.random.fold_in(key, i))
+              for i, (k, m) in enumerate(mods.items())}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 1, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, params, payloads
+
+
+def _aggregate(old, new):
+    if old is not None and new.ndim == 3:
+        return jnp.concatenate([old, new], axis=1)
+    return new
+
+
+def test_batched_single_session_matches_per_event(models):
+    """One session, flush per event == the per-event EMSServe (both
+    bucketed), recommendation for recommendation."""
+    cfg, splits, params, payloads = models
+    mk = lambda: Bucketer(max_buckets={"vitals": 8})
+    eng = EMSServe(splits, params, cached=True, real_time=True,
+                   bucketer=mk())
+    eng.run_episode(table6()[2], lambda ev: payloads[ev.modality],
+                    aggregate=_aggregate)
+    want = [r.recommendation for r in eng.records
+            if r.recommendation is not None]
+
+    beng = BatchedEMSServe(splits, params, bucketer=mk())
+    got = []
+    for ev in table6()[2]:
+        beng.submit("s0", ev, payloads[ev.modality], aggregate=_aggregate)
+        rep = beng.flush()
+        if "s0" in rep.recommendations:
+            got.append(rep.recommendations["s0"])
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a["protocol_logits"],
+                                   b["protocol_logits"], atol=1e-5)
+        np.testing.assert_allclose(a["quantity"], b["quantity"], atol=1e-5)
+
+
+def test_batched_multi_session_matches_per_event(models):
+    """N coalesced sessions produce the same final recommendation each
+    as N independent per-event engines."""
+    cfg, splits, params, payloads = models
+    eps = {f"s{i}": table6()[1 + i % 3] for i in range(4)}
+
+    want = {}
+    for sid, events in eps.items():
+        eng = EMSServe(splits, params, cached=True, real_time=True,
+                       bucketer=Bucketer(max_buckets={"vitals": 8}))
+        eng.run_episode(events, lambda ev: payloads[ev.modality],
+                        aggregate=_aggregate)
+        want[sid] = eng.records[-1].recommendation
+
+    beng = BatchedEMSServe(splits, params,
+                           bucketer=Bucketer(max_buckets={"vitals": 8}))
+    beng.run_episodes(eps, lambda sid, ev: payloads[ev.modality],
+                      aggregate=_aggregate)
+    for sid in eps:
+        got = beng.sessions[sid].last_recommendation
+        np.testing.assert_allclose(got["protocol_logits"],
+                                   want[sid]["protocol_logits"], atol=1e-5)
+
+
+def test_batched_flush_coalesces_calls(models):
+    """A flush runs ONE encoder call per (modality, bucket) per consumer,
+    not one per session."""
+    cfg, splits, params, payloads = models
+    beng = BatchedEMSServe(splits, params,
+                           bucketer=Bucketer(max_buckets={"vitals": 8}))
+    ev = Event(0, "vitals", 0.0)
+    for i in range(6):
+        beng.submit(f"s{i}", ev, payloads["vitals"], aggregate=_aggregate)
+    rep = beng.flush()
+    assert rep.n_events == 6
+    assert rep.n_encoder_calls == 2       # m2 and m3 consume vitals
+    assert rep.n_tail_calls == 0          # no text yet -> no model selected
+
+
+def test_compile_count_plateaus_with_growing_vitals(models):
+    """Once the bucket grid is warm, growing vitals streams add ZERO
+    XLA compiles (the recompile-bound acceptance criterion)."""
+    cfg, splits, params, payloads = models
+    beng = BatchedEMSServe(splits, params,
+                           bucketer=Bucketer(min_bucket=4,
+                                             max_buckets={"vitals": 4}),
+                           batch_bucket_min=2)
+    sids = ("a", "b")
+    t = 0
+
+    def send(kind):
+        nonlocal t
+        for sid in sids:
+            beng.submit(sid, Event(t, kind, float(t)), payloads[kind],
+                        aggregate=_aggregate)
+        beng.flush()
+        t += 1
+
+    # warmup: every modality + enough vitals growth to hit the max bucket
+    for kind in ("text", "scene", "vitals", "vitals", "vitals", "vitals",
+                 "vitals"):
+        send(kind)
+    warm = beng.compile_count()
+    for _ in range(6):                     # streams keep growing
+        send("vitals")
+    assert beng.compile_count() == warm
+    # but the streams really did grow past the bucket
+    assert beng.sessions["a"].inputs["vitals"].shape[1] > 4
+
+
+def test_per_event_engine_bucketed_bounds_compiles(models):
+    """EMSServe with a bucketer also plateaus on growing streams."""
+    cfg, splits, params, payloads = models
+    eng = EMSServe(splits, params, cached=True, real_time=True,
+                   bucketer=Bucketer(min_bucket=4, max_buckets={"vitals": 4}))
+    ev = lambda t, k: Event(t, k, float(t))
+    eng.on_event(ev(0, "text"), payloads["text"])
+    for t in range(1, 6):
+        eng.on_event(ev(t, "vitals"), payloads["vitals"],
+                     aggregate=_aggregate)
+    warm = eng.compile_count()
+    for t in range(6, 12):
+        eng.on_event(ev(t, "vitals"), payloads["vitals"],
+                     aggregate=_aggregate)
+    assert eng.compile_count() == warm
+
+
+def test_cumulative_running_total(models):
+    """cumulative_s is a running total (O(1) per event) and still equals
+    the sum over records."""
+    cfg, splits, params, payloads = models
+    eng = EMSServe(splits, params, cached=True, real_time=True)
+    eng.run_episode(table6()[1], lambda ev: payloads[ev.modality])
+    total = sum(r.total_s for r in eng.records)
+    assert eng.cumulative_time() == pytest.approx(total)
+    assert [r.cumulative_s for r in eng.records] == sorted(
+        r.cumulative_s for r in eng.records)

@@ -6,11 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.analysis import hlo_analyzer as H
 from repro.configs import get_config, reduced
-from repro.distributed.sharding import Policy
+from repro.distributed.sharding import Policy, abstract_mesh
 from repro.models import moe as M
 from repro.models import transformer as T
 
@@ -69,7 +69,7 @@ def test_a2a_grads_flow(a2a_setup):
 
 def test_fsdp_strategy_drops_tensor_parallel():
     cfg = get_config("mistral-nemo-12b")
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     pol = Policy(cfg, mesh, tuned=True, strategy="fsdp")
     aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
                              jax.random.PRNGKey(0))
@@ -85,7 +85,7 @@ def test_fsdp_strategy_drops_tensor_parallel():
 
 def test_fsdp_strategy_keeps_expert_dim():
     cfg = get_config("deepseek-v3-671b")
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     pol = Policy(cfg, mesh, tuned=True, strategy="fsdp")
     assert pol.experts_2d
     aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
@@ -98,7 +98,7 @@ def test_fsdp_strategy_keeps_expert_dim():
 def test_tuned_head_aware_sharding():
     """kv=8 heads can't shard over model=16: tuned policy replicates."""
     cfg = get_config("mistral-nemo-12b")
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     aparams = jax.eval_shape(lambda k: T.init_params(cfg, k),
                              jax.random.PRNGKey(0))
     base = Policy(cfg, mesh).param_pspecs(aparams)

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.episodes import random_episode

@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config, reduced
-from repro.distributed.sharding import Policy
+from repro.distributed.sharding import Policy, abstract_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.serving.engine import LLMServer, Request
@@ -19,8 +19,7 @@ from repro.configs.base import SHAPES
 
 def _fake_mesh(shape=(4, 2), axes=("data", "model")):
     """AbstractMesh lets us test specs without 8 real devices."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_param_pspecs_cover_tree():
