@@ -1,0 +1,219 @@
+"""Streaming async-modality serving: time-to-first vs time-to-final
+prediction, against the per-event complete-event baseline.
+
+Workload: N concurrent sessions, each an ``async_episode`` — modalities
+onset at different times per the lag scenarios (text-first radio
+transcript, vitals-first monitor hookup, scene-late camera), cycled
+across sessions. Arrivals from all sessions interleave in global
+episode-time order, exactly what an edge box at one incident sees.
+
+Two serving disciplines over the SAME arrivals, measured on the same
+serving clock the per-event engine uses (``core.engine.EMSServe``:
+``clock = max(clock, arrival_time) + compute``) — serving can never run
+ahead of data availability, and compute is the measured wall time of
+the actual jitted calls:
+
+  * **StreamingEMSServe** (subset-model zoo, shared parameter pytree,
+    ``share_encoders=True``): every arrival immediately yields a
+    partial-modality prediction; later arrivals re-fuse cached features
+    (zero encoder re-runs) until the prediction is final.
+    Time-to-first-prediction (TTFP) is the serving-clock time of a
+    session's FIRST (partial) prediction; time-to-final (TTF) of its
+    first all-modality prediction.
+  * **Per-event baseline** (full model only, driven by
+    ``core.engine.EMSServe`` records over the same interleaved arrival
+    stream): a session shows NOTHING until its complete event set (all
+    three modalities) has arrived and been fused. Time-to-complete is
+    the serving-clock time of that first complete-event prediction.
+
+Both runs are warmed (all XLA programs compiled) before timing, so the
+comparison is steady-state serving, not compilation.
+
+Acceptance (checked by ``--smoke``): at >= 4 concurrent sessions, mean
+streaming TTFP is strictly below the baseline's mean time-to-complete.
+
+-> artifacts/BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from . import common as C
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+SCENARIOS = ("text_first", "vitals_first", "scene_late")
+TEXT_LENS = (6, 12, 24, 31)
+
+
+def _workload(n_sessions, cfg, seed=0, *, n_vitals=4, n_scene=2):
+    from repro.core import async_episode
+    eps, payloads = {}, {}
+    base = C.sample_payloads(cfg, seed=seed)
+    for i in range(n_sessions):
+        sid = f"s{i}"
+        eps[sid] = async_episode(SCENARIOS[i % len(SCENARIOS)], seed=seed + i,
+                                 n_vitals=n_vitals, n_scene=n_scene)
+        text_len = min(TEXT_LENS[i % len(TEXT_LENS)], cfg.max_text_len)
+        p = C.sample_payloads(cfg, seed=seed + 1 + i)
+        payloads[sid] = {
+            "text": p["text"][:, :text_len],
+            "vitals": p["vitals"][:, :5],
+            "scene": p["scene"],
+        }
+    return eps, payloads
+
+
+def _arrivals(eps):
+    from repro.core import merge_arrivals
+    return merge_arrivals(eps)
+
+
+def _stats(xs):
+    xs = np.asarray(list(xs), float)
+    return {"mean_ms": float(xs.mean() * 1e3),
+            "p50_ms": float(np.percentile(xs, 50) * 1e3),
+            "max_ms": float(xs.max() * 1e3)}
+
+
+def _stream_engine(cfg, splits, params, n_sessions):
+    from repro.core import Bucketer
+    from repro.serving.stream_engine import StreamingEMSServe
+    return StreamingEMSServe(
+        splits, params, share_encoders=True, deadline_s=0.0,
+        bucketer=Bucketer(max_buckets={"vitals": 8,
+                                       "text": cfg.max_text_len}),
+        batch_bucket_min=min(8, n_sessions))
+
+
+def _run_stream(cfg, splits, params, eps, payloads, n_sessions):
+    """Flush per arrival; a shared serving clock gates each flush on the
+    arrival's episode time (identical accounting to EMSServe)."""
+    eng = _stream_engine(cfg, splits, params, n_sessions)
+    # deadline handled manually so the clock sees each arrival
+    eng.deadline_s = None
+    clock, wall = 0.0, 0.0
+    ttfp, ttf = {}, {}
+    for t, sid, ev in _arrivals(eps):
+        eng.submit(sid, ev, payloads[sid][ev.modality])
+        rep = eng.flush()
+        clock = max(clock, t) + rep.wall_s
+        wall += rep.wall_s
+        for p in rep.predictions:
+            if p.sid not in ttfp:
+                ttfp[p.sid] = clock
+            if p.kind == "final" and p.sid not in ttf:
+                ttf[p.sid] = clock
+    return eng, wall, ttfp, ttf
+
+
+def _run_baseline(cfg, splits_full, params_full, eps, payloads):
+    """Per-event engines over the full model only, fed the same
+    interleaved arrival stream on one shared serving clock: nothing is
+    shown for a session until its complete event set has arrived."""
+    from repro.core import EMSServe
+    engines = {sid: EMSServe(splits_full, params_full,
+                             cached=True, real_time=True)
+               for sid in eps}
+    complete = {}
+    clock, wall = 0.0, 0.0
+    for t, sid, ev in _arrivals(eps):
+        rec = engines[sid].on_event(ev, payloads[sid][ev.modality])
+        clock = max(clock, t) + rec.total_s
+        wall += rec.total_s
+        if rec.recommendation is not None and sid not in complete:
+            complete[sid] = clock
+    return engines, wall, complete
+
+
+def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
+    from repro.core import emsnet_zoo, split
+    import jax
+
+    n_sessions = n_sessions or (4 if (smoke or quick) else 16)
+    cfg = C.emsnet_cfg(quick or smoke)
+    eps, payloads = _workload(n_sessions, cfg, seed=seed,
+                              n_vitals=2 if smoke else 4,
+                              n_scene=2 if smoke else 3)
+
+    # streaming: subset zoo over ONE shared parameter pytree
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(seed))
+    params = {k: shared for k in zoo}
+    # baseline: the full model only, its own jit caches
+    splits_full = {"full": split(zoo["text+vitals+scene"])}
+    params_full = {"full": shared}
+
+    # ---- warmup both paths (compile every program), then time fresh runs
+    _run_stream(cfg, splits, params, eps, payloads, n_sessions)
+    _run_baseline(cfg, splits_full, params_full, eps, payloads)
+
+    eng, s_wall, ttfp, ttf = _run_stream(cfg, splits, params, eps,
+                                         payloads, n_sessions)
+    _bengines, b_wall, complete = _run_baseline(cfg, splits_full,
+                                                params_full, eps, payloads)
+
+    ttfp_s, ttf_s, comp_s = _stats(ttfp.values()), _stats(ttf.values()), \
+        _stats(complete.values())
+    result = {
+        "n_sessions": n_sessions,
+        "scenarios": [SCENARIOS[i % len(SCENARIOS)]
+                      for i in range(n_sessions)],
+        "arrivals_total": eng.events_total,
+        "stream": {
+            "wall_s": s_wall,
+            "time_to_first_prediction": ttfp_s,
+            "time_to_final_prediction": ttf_s,
+            "encoder_calls": eng.encoder_calls_total(),
+            "tail_calls": eng.tail_calls_total(),
+            "xla_compiles": eng.compile_count(),
+            "flushes": eng.flushes_total,
+        },
+        "baseline": {
+            "wall_s": b_wall,
+            "time_to_complete_prediction": comp_s,
+            "xla_compiles": next(iter(_bengines.values())).compile_count(),
+        },
+        "per_session": {
+            sid: {"ttfp_ms": ttfp[sid] * 1e3, "ttfinal_ms": ttf[sid] * 1e3,
+                  "baseline_complete_ms": complete[sid] * 1e3}
+            for sid in sorted(eps)},
+        "speedup_ttfp_vs_complete":
+            comp_s["mean_ms"] / ttfp_s["mean_ms"],
+        "passed_ttfp_below_baseline_complete":
+            ttfp_s["mean_ms"] < comp_s["mean_ms"]
+            and all(ttfp[sid] < complete[sid] for sid in eps),
+    }
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "BENCH_streaming.json").write_text(json.dumps(result, indent=2))
+
+    C.csv_row("stream_ttfp_mean", ttfp_s["mean_ms"] * 1e3,
+              f"ttfinal_mean_ms={ttf_s['mean_ms']:.2f};"
+              f"speedup_vs_complete={result['speedup_ttfp_vs_complete']:.2f}x")
+    C.csv_row("baseline_time_to_complete_mean", comp_s["mean_ms"] * 1e3,
+              f"n_sessions={n_sessions}")
+
+    if smoke and not result["passed_ttfp_below_baseline_complete"]:
+        raise SystemExit(
+            "streaming TTFP not below baseline time-to-complete: "
+            f"{ttfp_s['mean_ms']:.2f} ms >= {comp_s['mean_ms']:.2f} ms")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run + assert TTFP < baseline complete")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    r = run(quick=not args.full, n_sessions=args.sessions, smoke=args.smoke)
+    print(json.dumps(r, indent=2))

@@ -47,3 +47,73 @@ def random_episode(n_events: int, seed: int, *, inter_arrival: float = 1.0,
     if "text" not in kinds:
         kinds[rng.integers(n_events)] = "text"
     return [Event(i, k, i * inter_arrival) for i, k in enumerate(kinds)]
+
+
+def merge_arrivals(episodes):
+    """Interleave per-session episodes into one global arrival stream:
+    ``{sid: [Event]} -> [(arrival_time, sid, Event)]`` sorted by time
+    (ties broken by sid) — what one edge box at one incident sees. The
+    single definition shared by the streaming engine, launcher, and
+    benchmarks so they can never disagree on arrival order."""
+    return sorted(((ev.arrival_time, sid, ev)
+                   for sid, evs in episodes.items() for ev in evs),
+                  key=lambda x: (x[0], x[1]))
+
+
+# ----------------------------------------------------------------------
+# Asynchronous-arrival scenarios (streaming runtime workloads)
+# ----------------------------------------------------------------------
+
+# Per-modality onset-lag distributions: modality -> (mu, sigma) seconds
+# until that modality FIRST becomes available, N(mu, sigma) clipped >= 0.
+# The three presets mirror how incidents actually unfold in the field:
+#   text_first   — the radio transcript lands before anything else
+#                  (dispatch/handover speech precedes patient contact);
+#   vitals_first — the monitor is hooked up before anyone narrates
+#                  (unresponsive patient, vitals stream starts at once);
+#   scene_late   — the camera comes up last (glasses donned / scene
+#                  detector warm-up while text + vitals already flow).
+LAG_SCENARIOS = {
+    "text_first":   {"text": (0.0, 0.05), "vitals": (2.0, 0.8),
+                     "scene": (5.0, 1.5)},
+    "vitals_first": {"vitals": (0.0, 0.1), "text": (3.0, 1.0),
+                     "scene": (4.0, 1.5)},
+    "scene_late":   {"text": (0.5, 0.3), "vitals": (1.0, 0.4),
+                     "scene": (8.0, 2.0)},
+}
+
+
+def async_episode(scenario: str = "text_first", seed: int = 0, *,
+                  n_vitals: int = 6, n_scene: int = 3,
+                  vitals_period: float = 1.0, scene_period: float = 2.0,
+                  lags=None) -> List[Event]:
+    """Episode with per-modality asynchronous onsets.
+
+    Each modality's first arrival is drawn from its lag distribution
+    (``lags`` overrides a ``LAG_SCENARIOS`` preset; values are
+    ``(mu, sigma)`` pairs). Text is a single utterance; vitals then
+    stream every ``vitals_period`` s and scene refreshes every
+    ``scene_period`` s after their onsets. Events are returned sorted by
+    arrival time and re-indexed — so the *order in which modalities
+    appear* varies per seed/scenario, which is exactly the workload the
+    streaming runtime must absorb."""
+    spec = dict(lags if lags is not None else LAG_SCENARIOS[scenario])
+    rng = np.random.default_rng(seed)
+
+    def onset(m):
+        mu, sigma = spec[m]
+        return float(max(0.0, rng.normal(mu, sigma)))
+
+    events = []
+    if "text" in spec:
+        events.append(("text", onset("text")))
+    if "vitals" in spec:
+        t0 = onset("vitals")
+        events += [("vitals", t0 + i * vitals_period)
+                   for i in range(max(1, n_vitals))]
+    if "scene" in spec:
+        t0 = onset("scene")
+        events += [("scene", t0 + i * scene_period)
+                   for i in range(max(1, n_scene))]
+    events.sort(key=lambda kt: (kt[1], kt[0]))
+    return [Event(i, k, t) for i, (k, t) in enumerate(events)]

@@ -59,3 +59,51 @@ def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModu
         max_lengths=({"text": cfg.max_text_len} if "text" in modalities
                      else {}),
     )
+
+
+def emsnet_subset_module(cfg, subset,
+                         all_modalities=("text", "vitals", "scene")
+                         ) -> MultimodalModule:
+    """An EMSNet view over a modality *subset* that runs on the FULL
+    model's parameters: encoders are the full model's encoders, the tail
+    slices the full fusion heads to the subset's rows
+    (``models.emsnet.slice_heads``). Every subset module therefore
+    shares one parameter pytree with the full model — the property the
+    streaming runtime's progressive re-fusion relies on (`init_fn` inits
+    the FULL model, and one such pytree serves all subsets)."""
+    from repro.models import emsnet as E
+
+    subset = tuple(m for m in all_modalities if m in set(subset))
+
+    def enc(m):
+        return lambda params, inputs: E.encode(params, cfg, m, inputs)
+
+    def tail(params, feats):
+        ph = E.slice_heads(params["heads"], cfg, all_modalities, subset)
+        return E.fuse_and_heads(ph, feats, subset)
+
+    base = emsnet_module(cfg, all_modalities)
+    return MultimodalModule(
+        name=f"{base.name}[{'+'.join(subset)}]",
+        modalities=subset,
+        encoder_fns={m: enc(m) for m in subset},
+        tail_fn=tail,
+        init_fn=lambda key: E.init_params(cfg, key, all_modalities),
+        payload_bytes={m: base.payload_bytes[m] for m in subset},
+        max_lengths={m: n for m, n in base.max_lengths.items()
+                     if m in subset},
+    )
+
+
+def emsnet_zoo(cfg, all_modalities=("text", "vitals", "scene")):
+    """Subset modules for every non-empty modality combination, keyed
+    ``"text+vitals"``-style. All share one full-model parameter pytree:
+    ``params = zoo["text+vitals+scene"].init_fn(key)`` serves them all."""
+    from itertools import combinations
+
+    zoo = {}
+    for r in range(1, len(all_modalities) + 1):
+        for subset in combinations(all_modalities, r):
+            zoo["+".join(subset)] = emsnet_subset_module(
+                cfg, subset, all_modalities)
+    return zoo

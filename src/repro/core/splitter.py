@@ -45,12 +45,22 @@ class SplitModel:
 def select_model(models: Dict[str, SplitModel], observed) -> str | None:
     """EMSServe's model-selection rule (paper §4.2): the model consuming
     the most modalities whose inputs have all been observed. Shared by
-    the per-event and batched engines so their recommendations agree."""
-    best, best_n = None, -1
+    the per-event, batched, and streaming engines so their
+    recommendations agree.
+
+    Ties (several models consuming the same number of observed
+    modalities) break on the lexicographically greatest sorted modality
+    tuple, then the model name — NOT on dict insertion order, so two
+    engines built from differently-ordered zoos always pick the same
+    model."""
+    obs = set(observed)
+    best, best_key = None, None
     for name, sm in models.items():
         mods = set(sm.modalities())
-        if mods <= set(observed) and len(mods) > best_n:
-            best, best_n = name, len(mods)
+        if mods <= obs:
+            key = (len(mods), tuple(sorted(mods)), name)
+            if best_key is None or key > best_key:
+                best, best_key = name, key
     return best
 
 

@@ -2,11 +2,15 @@
 with adaptive offloading, feature caching, and (optionally) an edge
 crash, printing the per-event trace. ``--batched N`` instead serves N
 concurrent sessions through the coalescing BatchedEMSServe fast path
-and prints per-flush stats.
+and prints per-flush stats. ``--stream N`` serves N concurrent sessions
+with *asynchronously arriving modalities* through StreamingEMSServe,
+printing every progressive (partial -> final) prediction and the
+per-session time-to-first/final-prediction summary.
 
   PYTHONPATH=src python -m repro.launch.serve --episode 1 --mobility
   PYTHONPATH=src python -m repro.launch.serve --episode 2 --no-cache
   PYTHONPATH=src python -m repro.launch.serve --batched 8
+  PYTHONPATH=src python -m repro.launch.serve --stream 4 --scenario mix
 """
 from __future__ import annotations
 
@@ -53,6 +57,17 @@ def main():
     ap.add_argument("--crash-edge-at", type=int, default=-1)
     ap.add_argument("--batched", type=int, default=0, metavar="N",
                     help="serve N concurrent sessions via BatchedEMSServe")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="serve N concurrent async-modality sessions via "
+                         "StreamingEMSServe (progressive predictions)")
+    ap.add_argument("--scenario", default="mix",
+                    choices=["mix", "text_first", "vitals_first",
+                             "scene_late"],
+                    help="--stream: inter-modality lag scenario")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="--stream: coalesce arrivals within this window "
+                         "of episode time before flushing (0 = flush "
+                         "per arrival)")
     args = ap.parse_args()
 
     from repro.configs.emsnet import config as emsnet_config
@@ -61,6 +76,46 @@ def main():
                             nlos_bandwidth, profile, table6)
 
     cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
+
+    if args.stream:
+        from repro.core import async_episode, emsnet_zoo, split
+        from repro.serving.stream_engine import StreamingEMSServe
+        zoo = emsnet_zoo(cfg)
+        splits = {k: split(m) for k, m in zoo.items()}
+        shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+        params = {k: shared for k in zoo}
+        payloads = sample_payloads(cfg)
+        names = (["text_first", "vitals_first", "scene_late"]
+                 if args.scenario == "mix" else [args.scenario])
+        eps = {f"s{i}": async_episode(names[i % len(names)], seed=i,
+                                      n_vitals=4, n_scene=2)
+               for i in range(args.stream)}
+        eng = StreamingEMSServe(
+            splits, params, share_encoders=True, deadline_s=None,
+            bucketer=Bucketer(max_buckets={"vitals": cfg.vitals_len,
+                                           "text": cfg.max_text_len}),
+            batch_bucket_min=min(8, args.stream),
+            max_history=None)      # the trace below prints every flush
+        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                         sim_window=args.deadline_ms / 1e3)
+        for f in eng.flushes:
+            for p in f.predictions:
+                proto = int(jnp.argmax(p.outputs["protocol_logits"]))
+                print(f"flush[{f.flush_id:3d}] {p.sid:4s} "
+                      f"{p.kind:7s} over {'+'.join(p.modalities):24s} "
+                      f"-> protocol={proto}")
+        print(f"\n{args.stream} sessions, {eng.events_total} arrivals, "
+              f"{eng.flushes_total} flushes, "
+              f"{eng.encoder_calls_total()} encoder calls, "
+              f"XLA compiles {eng.compile_count()}")
+        for sid in sorted(eps):
+            ttfp = eng.time_to_first_prediction(sid)
+            ttf = eng.time_to_final_prediction(sid)
+            print(f"  {sid}: time-to-first {ttfp*1e3:7.1f} ms | "
+                  f"time-to-final "
+                  f"{'n/a' if ttf is None else f'{ttf*1e3:7.1f} ms'}")
+        return
+
     splits, params = build_models(cfg)
     payloads = sample_payloads(cfg)
 

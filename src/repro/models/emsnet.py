@@ -205,6 +205,42 @@ def fuse_and_heads(p, features: dict, modalities):
     }
 
 
+def slice_heads(heads, cfg: EMSNetConfig, all_modalities, subset):
+    """Restrict full-fusion head params to a modality subset.
+
+    Because fusion is concatenation followed by a dense layer, a head
+    over the subset's features IS the full head with only the weight
+    rows belonging to the subset's slice of F_C (biases unchanged).
+    This is what lets one trained parameter set serve every partial-
+    modality combination — no per-subset heads to train or store.
+    """
+    dims = cfg.feature_dims
+    offs, off = {}, 0
+    for m in all_modalities:
+        offs[m] = off
+        off += dims[m]
+    subset = tuple(m for m in all_modalities if m in set(subset))
+
+    def take(p):
+        w = jnp.concatenate([p["w"][offs[m]:offs[m] + dims[m]]
+                             for m in subset], axis=0)
+        return {"w": w, **({"b": p["b"]} if "b" in p else {})}
+
+    return {k: take(v) for k, v in heads.items()}
+
+
+def partial_forward(params, cfg: EMSNetConfig, batch: dict, subset,
+                    all_modalities=("text", "vitals", "scene")):
+    """One-shot forward restricted to an observed-modality subset:
+    encode only the subset, fuse through the sliced full heads. With
+    ``subset == all_modalities`` this equals ``forward`` exactly (the
+    row slices reassemble the full weight matrices)."""
+    subset = tuple(m for m in all_modalities if m in set(subset))
+    feats = {m: encode(params, cfg, m, batch[m]) for m in subset}
+    ph = slice_heads(params["heads"], cfg, all_modalities, subset)
+    return fuse_and_heads(ph, feats, subset)
+
+
 # ----------------------------------------------------------------------
 # Whole model
 # ----------------------------------------------------------------------

@@ -1,0 +1,11 @@
+"""Serving runtimes over the split-model zoo.
+
+  * ``engine`` / ``kv_cache`` — LLM decode serving (KV-cache paths);
+  * ``batch_engine.BatchedEMSServe`` — multi-session, shape-bucketed,
+    dispatch-async batch flushes (complete events);
+  * ``stream_engine.StreamingEMSServe`` — async-modality streaming with
+    progressive partial->final predictions and deadline-driven flushes.
+"""
+from .batch_engine import BatchedEMSServe, FlushReport  # noqa: F401
+from .stream_engine import (Prediction, StreamFlushReport,  # noqa: F401
+                            StreamingEMSServe, StreamSession)

@@ -1,0 +1,125 @@
+"""Bucketing invariants: monotone bucket selection, masks that zero out
+exactly the padded tail, and bucketed-equals-unbucketed encoder math on
+the unpadded prefix (including length-0 and length-==-bucket rows)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.emsnet import tiny
+from repro.core import Bucketer, bucket_length
+from repro.core.bucketing import pad_axis, stack_bucketed
+from repro.models import emsnet as E
+
+
+# ----------------------------------------------------------- monotone
+
+def test_bucket_length_monotone_unclamped():
+    bs = [bucket_length(n) for n in range(1, 257)]
+    assert all(a <= b for a, b in zip(bs, bs[1:]))
+
+
+@pytest.mark.parametrize("max_bucket", [4, 16, 48, 64])
+def test_bucket_length_monotone_clamped(max_bucket):
+    bs = [bucket_length(n, max_bucket=max_bucket) for n in range(1, 257)]
+    assert all(a <= b for a, b in zip(bs, bs[1:]))
+    assert bs[-1] == max_bucket                    # clamp reached
+    assert all(b <= max_bucket for b in bs)        # never past the cap
+
+
+def test_bucket_length_idempotent():
+    """A bucketed length re-buckets to itself: serving a padded payload
+    again never grows it."""
+    for n in range(1, 129):
+        b = bucket_length(n, max_bucket=64)
+        assert bucket_length(b, max_bucket=64) == b
+
+
+# ------------------------------------------------- masks vs padded tail
+
+def test_vitals_mask_covers_exactly_the_padded_tail():
+    b = Bucketer(min_bucket=4)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5, 3)),
+                    jnp.float32)
+    p = b.fit("vitals", x)
+    T_b, n = int(p["x"].shape[1]), int(p["len"][0])
+    assert n == 5 and T_b == 8
+    np.testing.assert_array_equal(np.asarray(p["x"][:, :n]), np.asarray(x))
+    assert np.all(np.asarray(p["x"][:, n:]) == 0.0)   # tail is all-zero
+
+
+def test_text_pad_is_exactly_the_pad_suffix():
+    b = Bucketer(min_bucket=4)
+    toks = jnp.asarray([[7, 9, 11]], jnp.int32)
+    p = b.fit("text", toks)
+    assert p.shape == (1, 4)
+    np.testing.assert_array_equal(np.asarray(p[0, :3]), [7, 9, 11])
+    assert int(p[0, 3]) == 0                          # PAD id, masked out
+
+
+def test_stack_bucketed_surplus_rows_are_masked_out():
+    """Batch-axis padding rows carry len=0 (vitals) / PAD=0 (text), so
+    the encoders' masks zero exactly those rows."""
+    rows = [{"x": jnp.ones((1, 4, 2)), "len": jnp.array([4], jnp.int32)}
+            for _ in range(3)]
+    s = stack_bucketed(rows, 8)
+    assert np.all(np.asarray(s["len"][3:]) == 0)
+    assert np.all(np.asarray(s["x"][3:]) == 0.0)
+    t = stack_bucketed([jnp.full((1, 4), 5, jnp.int32)] * 3, 8)
+    assert np.all(np.asarray(t[3:]) == 0)
+
+
+# --------------------------------- bucketed == unbucketed on the prefix
+
+@pytest.mark.parametrize("kind", ["rnn", "gru", "lstm"])
+def test_bucketed_vitals_rows_equal_unpadded_prefix(kind):
+    """Each row of a bucketed call equals the unbucketed call on that
+    row's unpadded prefix — including a length-0 row (the zero initial
+    state) and a length-==-bucket row (no padding at all)."""
+    cfg = tiny(vitals_encoder=kind)
+    p = E.vitals_encoder_init(jax.random.PRNGKey(0), cfg)
+    T_b, lens = 8, [0, 8, 3]                          # empty, full, partial
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(len(lens), T_b, cfg.n_vitals)),
+                    jnp.float32)
+    # zero the padded tails so the payload matches what the bucketer emits
+    mask = (np.arange(T_b)[None, :, None]
+            < np.asarray(lens)[:, None, None])
+    x = x * jnp.asarray(mask, jnp.float32)
+    got = E.vitals_encoder(p, cfg, {"x": x,
+                                    "len": jnp.asarray(lens, jnp.int32)})
+    for i, n in enumerate(lens):
+        want = E.vitals_encoder(p, cfg, x[i:i + 1, :n])
+        np.testing.assert_allclose(got[i:i + 1], want, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["rnn", "gru", "lstm"])
+def test_length_zero_row_is_initial_state(kind):
+    cfg = tiny(vitals_encoder=kind)
+    p = E.vitals_encoder_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(1, 4, cfg.n_vitals)),
+                    jnp.float32)
+    out = E.vitals_encoder(p, cfg, {"x": x, "len": jnp.zeros((1,), jnp.int32)})
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=0)
+
+
+def test_bucketed_text_encoder_equals_unpadded():
+    """Padding text to its bucket must not move F_T (key mask + masked
+    mean-pool): encoder(bucketed) == encoder(raw)."""
+    cfg = tiny()
+    p = E.text_encoder_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        1, cfg.vocab_size, (2, 5)), jnp.int32)
+    want = E.text_encoder(p, cfg, toks)
+    got = E.text_encoder(p, cfg, Bucketer().fit("text", toks))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_pad_axis_crop_directions():
+    x = jnp.arange(8).reshape(1, 8)
+    np.testing.assert_array_equal(np.asarray(pad_axis(x, 3, axis=1,
+                                                      keep="tail"))[0],
+                                  [5, 6, 7])
+    np.testing.assert_array_equal(np.asarray(pad_axis(x, 3, axis=1,
+                                                      keep="head"))[0],
+                                  [0, 1, 2])

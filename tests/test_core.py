@@ -55,6 +55,41 @@ def test_split_equals_full(tiny_models):
         np.testing.assert_allclose(via_split[k], via_full[k], atol=1e-5)
 
 
+class _FakeSplit:
+    """select_model only needs .modalities()."""
+    def __init__(self, *mods):
+        self._mods = tuple(mods)
+
+    def modalities(self):
+        return self._mods
+
+
+def test_select_model_prefers_largest_subset_deterministically():
+    """Regression: when several models consume equally many observed
+    modalities, the winner must not depend on dict insertion order."""
+    from repro.core.splitter import select_model
+    tv, ts, vs = (_FakeSplit("text", "vitals"), _FakeSplit("text", "scene"),
+                  _FakeSplit("vitals", "scene"))
+    observed = {"text", "vitals", "scene"}
+    winners = {select_model(dict(order), observed)
+               for order in [
+                   [("a", tv), ("b", ts), ("c", vs)],
+                   [("c", vs), ("b", ts), ("a", tv)],
+                   [("b", ts), ("a", tv), ("c", vs)]]}
+    assert winners == {"a"}      # ("text","vitals") sorts above the others
+    # largest subset still beats any tie-break
+    full = _FakeSplit("text", "vitals", "scene")
+    assert select_model({"a": tv, "z": full}, observed) == "z"
+    assert select_model({"z": full, "a": tv}, observed) == "z"
+    # same modality set under two names: the greater name wins, any order
+    assert select_model({"x": tv, "y": _FakeSplit("text", "vitals")},
+                        {"text", "vitals"}) == "y"
+    assert select_model({"y": _FakeSplit("text", "vitals"), "x": tv},
+                        {"text", "vitals"}) == "y"
+    # nothing satisfiable -> None
+    assert select_model({"a": tv}, {"scene"}) is None
+
+
 # -------------------------------------------------------- feature cache
 
 def test_cache_staleness_invariant():
@@ -124,6 +159,40 @@ def test_random_episode_has_text():
     ev = EP.random_episode(15, seed=3)
     assert any(e.modality == "text" for e in ev)
     assert [e.index for e in ev] == list(range(15))
+
+
+@pytest.mark.parametrize("scenario", sorted(EP.LAG_SCENARIOS))
+def test_async_episode_invariants(scenario):
+    ev = EP.async_episode(scenario, seed=7, n_vitals=4, n_scene=3)
+    assert len(ev) == 1 + 4 + 3
+    assert sum(e.modality == "text" for e in ev) == 1
+    times = [e.arrival_time for e in ev]
+    assert times == sorted(times) and all(t >= 0 for t in times)
+    assert [e.index for e in ev] == list(range(len(ev)))
+    # deterministic per seed
+    again = EP.async_episode(scenario, seed=7, n_vitals=4, n_scene=3)
+    assert ev == again
+
+
+def test_async_episode_scenarios_reorder_modalities():
+    """The presets really change which modality arrives first."""
+    first = {s: EP.async_episode(s, seed=0, n_vitals=2, n_scene=2)[0].modality
+             for s in ("text_first", "vitals_first")}
+    assert first["text_first"] == "text"
+    assert first["vitals_first"] == "vitals"
+    # scene-late: the scene feed onsets after text and vitals
+    ev = EP.async_episode("scene_late", seed=0, n_vitals=2, n_scene=2)
+    t_scene = min(e.arrival_time for e in ev if e.modality == "scene")
+    t_other = max(e.arrival_time for e in ev
+                  if e.modality == "text")
+    assert t_scene > t_other
+
+
+def test_async_episode_custom_lags():
+    ev = EP.async_episode(lags={"text": (0.0, 0.0), "vitals": (1.0, 0.0)},
+                          seed=0, n_vitals=2)
+    assert [e.modality for e in ev] == ["text", "vitals", "vitals"]
+    assert ev[1].arrival_time == pytest.approx(1.0)
 
 
 # ---------------------------------------------------------------- engine

@@ -90,6 +90,88 @@ def test_offload_decision_consistent(bw, base_t, payload):
     assert (d.tier == "edge") == (edge_cost < glass_cost)
 
 
+_CACHE_OPS = st.lists(st.tuples(
+    st.sampled_from(["put", "touch", "get", "features", "drop"]),
+    st.sampled_from(["text", "vitals", "scene"]),
+    st.sampled_from(["glass", "edge"]),
+    st.integers(0, 4)), max_size=60)
+
+
+@settings(**SETTINGS)
+@given(_CACHE_OPS, st.integers(0, 3))
+def test_cache_never_serves_stale_features(ops, max_staleness):
+    """Any put/get/touch/drop_tier sequence: a returned entry is never
+    staler than max_staleness relative to the probed input_step, and
+    StalenessError is raised EXACTLY when an entry exists whose lag
+    exceeds it (None exactly when absent)."""
+    from repro.core.feature_cache import FeatureCache, StalenessError
+    c = FeatureCache(max_staleness=max_staleness)
+    model = {}                          # modality -> [feature, step, tier]
+    step = 0
+    for op, m, tier, k in ops:
+        if op == "put":
+            step += 1
+            c.put("s", m, step, step=step, tier=tier)
+            model[m] = [step, step, tier]
+        elif op == "touch":
+            c.touch("s", m, step)
+            if m in model:
+                model[m][1] = step       # re-stamped, feature unchanged
+        elif op == "drop":
+            c.drop_tier(tier)
+            model = {mm: v for mm, v in model.items() if v[2] != tier}
+        elif op == "get":
+            # probe input_steps both within and beyond the window
+            input_step = max(0, step + k - 2)
+            if m not in model:
+                assert c.get("s", m, input_step=input_step) is None
+            elif input_step - model[m][1] > max_staleness:
+                with pytest.raises(StalenessError):
+                    c.get("s", m, input_step=input_step)
+            else:
+                e = c.get("s", m, input_step=input_step)
+                assert e.feature == model[m][0]
+                assert input_step - e.step <= max_staleness
+        else:                                  # features(): the fuse path
+            mods = ("text", "vitals", "scene")
+            input_steps = {mm: max(0, step + k - 2) for mm in mods}
+            stale = [mm for mm in mods if mm in model and
+                     input_steps[mm] - model[mm][1] > max_staleness]
+            if stale:
+                # the model would fuse a stale feature -> must raise,
+                # unless an earlier missing modality short-circuits
+                first_missing = next((i for i, mm in enumerate(mods)
+                                      if mm not in model), len(mods))
+                first_stale = min(mods.index(mm) for mm in stale)
+                if first_stale < first_missing:
+                    with pytest.raises(StalenessError):
+                        c.features("s", mods, input_steps=input_steps)
+                else:
+                    assert c.features("s", mods,
+                                      input_steps=input_steps) is None
+            else:
+                out = c.features("s", mods, input_steps=input_steps)
+                if all(mm in model for mm in mods):
+                    assert out == {mm: model[mm][0] for mm in mods}
+                else:
+                    assert out is None
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.sampled_from(["text", "vitals", "scene"]),
+                min_size=1, max_size=20))
+def test_cache_features_all_or_nothing(puts):
+    """features() returns every requested modality or None — it never
+    hands the fuse path a partial dict."""
+    from repro.core.feature_cache import FeatureCache
+    c = FeatureCache()
+    for i, m in enumerate(puts):
+        c.put("s", m, i, step=i)
+    for mods in (("text",), ("text", "vitals"), ("text", "vitals", "scene")):
+        out = c.features("s", mods)
+        assert out is None or set(out) == set(mods)
+
+
 @settings(**SETTINGS)
 @given(st.integers(2, 64), st.integers(2, 8), st.randoms(use_true_random=False))
 def test_softmax_ce_nonnegative_and_bounded(n, v, pyrng):

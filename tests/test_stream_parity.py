@@ -1,0 +1,235 @@
+"""Parity tier: StreamingEMSServe vs the one-shot ``emsnet.forward``.
+
+For every modality-arrival ordering, the streaming runtime's FINAL
+prediction must match the one-shot full forward, and every INTERMEDIATE
+prediction must match ``partial_forward`` restricted to the
+arrived-modality subset — with zero encoder re-runs once a modality's
+feature is cached."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.emsnet import tiny
+from repro.core import Bucketer, emsnet_zoo, split
+from repro.core.episodes import Event
+from repro.models import emsnet as E
+from repro.serving.stream_engine import StreamingEMSServe
+
+ALL = ("text", "vitals", "scene")
+ORDERINGS = list(itertools.permutations(ALL))
+PAIRS = list(itertools.permutations(ALL, 2))
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+def _engine(cfg, splits, params, **kw):
+    kw.setdefault("share_encoders", True)
+    kw.setdefault("bucketer", Bucketer(max_buckets={
+        "vitals": 8, "text": cfg.max_text_len}))
+    return StreamingEMSServe(splits, params, **kw)
+
+
+def _canon(arrived):
+    return tuple(m for m in ALL if m in set(arrived))
+
+
+def _assert_outputs_close(got, want, atol=1e-5):
+    np.testing.assert_allclose(got["protocol_logits"],
+                               want["protocol_logits"], atol=atol)
+    np.testing.assert_allclose(got["medicine_logits"],
+                               want["medicine_logits"], atol=atol)
+    np.testing.assert_allclose(got["quantity"], want["quantity"], atol=atol)
+
+
+# ------------------------------------------------- full-ordering parity
+
+@pytest.mark.parametrize("order", ORDERINGS,
+                         ids=["-".join(o) for o in ORDERINGS])
+def test_every_arrival_order_matches_one_shot_forward(order, zoo_models):
+    """Intermediate predictions == partial_forward on the arrived
+    subset; the final prediction == the one-shot full forward; exactly
+    ONE encoder call per arrival (no re-encodes on re-fusion)."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(cfg, splits, params)
+    for i, m in enumerate(order):
+        rep = eng.submit("s0", Event(i, m, float(i)), payloads[m])
+        assert rep.n_encoder_calls == 1       # only the arriving modality
+        assert len(rep.predictions) == 1
+        pred = rep.predictions[0]
+        subset = _canon(order[:i + 1])
+        assert pred.modalities == subset
+        assert pred.kind == ("final" if len(subset) == 3 else "partial")
+        want = E.partial_forward(shared, cfg, payloads, subset)
+        _assert_outputs_close(pred.outputs, want)
+    final = eng.sessions["s0"].predictions[-1]
+    want_full = E.forward(shared, cfg, payloads)
+    _assert_outputs_close(final.outputs, want_full)
+    # 3 arrivals -> exactly 3 encoder runs, and the re-fusions consumed
+    # cached features (2 hits at the 2nd flush + 3 at the 3rd, plus the
+    # newly-put entries read back)
+    assert eng.encoder_calls_total() == 3
+    assert eng.cache.hits >= 3
+
+
+# ------------------------------------------------ 2-modality subsets
+
+@pytest.mark.parametrize("pair", PAIRS, ids=["-".join(p) for p in PAIRS])
+def test_two_modality_subsets_match_partial_forward(pair, zoo_models):
+    """With only two modalities ever arriving (either order), the last
+    prediction equals partial_forward on that pair and stays partial."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(cfg, splits, params)
+    for i, m in enumerate(pair):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    pred = eng.sessions["s0"].predictions[-1]
+    subset = _canon(pair)
+    assert pred.modalities == subset and pred.kind == "partial"
+    want = E.partial_forward(shared, cfg, payloads, subset)
+    _assert_outputs_close(pred.outputs, want)
+    assert eng.encoder_calls_total() == 2
+
+
+# ------------------------------------------------- re-fusion economics
+
+def test_refusion_never_reencodes_cached_modalities(zoo_models):
+    """After warmup, re-arrivals of ONE modality re-encode only it; the
+    other cached features are reused (hit counters) and the compile
+    count stays flat (no new XLA programs)."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(cfg, splits, params)
+    for i, m in enumerate(ALL):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    warm_compiles = eng.compile_count()
+    enc_before = eng.encoder_calls_total()
+    hits_before = eng.cache.hits
+    for i in range(3, 8):                       # vitals keep refreshing
+        rep = eng.submit("s0", Event(i, "vitals", float(i)),
+                         payloads["vitals"])
+        assert rep.n_encoder_calls == 1         # vitals only
+        assert rep.predictions[0].kind == "final"
+    assert eng.encoder_calls_total() == enc_before + 5
+    # each re-fusion read text+scene (and the fresh vitals) from cache
+    assert eng.cache.hits >= hits_before + 10
+    assert eng.compile_count() == warm_compiles
+
+
+def test_multi_session_coalesced_matches_flush_per_event(zoo_models):
+    """Deadline-coalesced flushes over 4 interleaved sessions produce
+    the same final predictions as flush-per-arrival serving."""
+    cfg, splits, shared, params, payloads = zoo_models
+    orders = ORDERINGS[:4]
+
+    def run(coalesce):
+        eng = _engine(cfg, splits, params,
+                      deadline_s=None, batch_bucket_min=2)
+        for i in range(3):                       # tick i: one arrival each
+            for s, order in enumerate(orders):
+                eng.submit(f"s{s}", Event(i, order[i], float(i)),
+                           payloads[order[i]])
+                if not coalesce:
+                    eng.flush()
+            if coalesce:
+                eng.flush()
+        eng.drain()
+        return {f"s{s}": eng.sessions[f"s{s}"].predictions[-1]
+                for s in range(len(orders))}
+
+    per_event, coalesced = run(False), run(True)
+    for sid in per_event:
+        assert coalesced[sid].kind == "final"
+        _assert_outputs_close(coalesced[sid].outputs,
+                              per_event[sid].outputs)
+        want = E.forward(shared, cfg, payloads)
+        _assert_outputs_close(coalesced[sid].outputs, want)
+
+
+def test_deadline_policy_buffers_then_flushes(zoo_models):
+    """deadline_s > 0 buffers submits until the oldest pending arrival
+    exceeds the deadline on the injected clock; poll() also flushes."""
+    cfg, splits, shared, params, payloads = zoo_models
+    now = {"t": 0.0}
+    eng = _engine(cfg, splits, params, deadline_s=1.0,
+                  time_fn=lambda: now["t"])
+    assert eng.submit("s0", Event(0, "text", 0.0), payloads["text"]) is None
+    now["t"] = 0.5
+    assert eng.poll() is None                   # not old enough yet
+    now["t"] = 1.5
+    rep = eng.submit("s0", Event(1, "vitals", 1.5), payloads["vitals"])
+    assert rep is not None and rep.n_events == 2
+    assert rep.predictions[0].modalities == ("text", "vitals")
+    # nothing pending -> poll is a no-op
+    assert eng.poll() is None
+
+
+def test_history_bounded_but_totals_keep_counting(zoo_models):
+    """max_history bounds the retained reports/predictions (they hold
+    device arrays) while the lifetime counters keep the true totals."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(cfg, splits, params, max_history=2)
+    for i in range(7):
+        m = ALL[i % 3]
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    assert len(eng.flushes) == 2                       # window
+    assert len(eng.sessions["s0"].predictions) == 2
+    assert eng.flushes_total == 7                      # totals
+    assert eng.encoder_calls_total() == 7
+    assert eng.flushes[-1].flush_id == 6               # ids keep advancing
+    # the retained tail is the newest data
+    assert eng.sessions["s0"].predictions[-1].kind == "final"
+
+
+def test_run_arrivals_sim_window_coalesces_like_deadline(zoo_models):
+    """sim_window batches arrivals on episode time with the deadline
+    rule; window 0 flushes per arrival and both yield the same finals."""
+    from repro.core.episodes import merge_arrivals
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = {"a": [Event(0, "text", 0.0), Event(1, "vitals", 0.2),
+                 Event(2, "scene", 3.0)],
+           "b": [Event(0, "vitals", 0.1), Event(1, "text", 2.9),
+                 Event(2, "scene", 3.1)]}
+    assert [sid for _, sid, _ in merge_arrivals(eps)] == \
+        ["a", "b", "a", "b", "a", "b"]
+
+    def finals(window):
+        eng = _engine(cfg, splits, params, deadline_s=None,
+                      batch_bucket_min=2)
+        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                         sim_window=window)
+        return eng, {sid: eng.sessions[sid].predictions[-1] for sid in eps}
+
+    per_arrival, fa = finals(0.0)
+    coalesced, fb = finals(1.0)
+    assert per_arrival.flushes_total == 6
+    assert coalesced.flushes_total < 6                 # batching happened
+    for sid in eps:
+        assert fa[sid].kind == fb[sid].kind == "final"
+        _assert_outputs_close(fb[sid].outputs, fa[sid].outputs)
+
+
+def test_partial_forward_full_subset_equals_forward(zoo_models):
+    """slice_heads over the full subset reassembles the exact heads."""
+    cfg, splits, shared, params, payloads = zoo_models
+    a = E.partial_forward(shared, cfg, payloads, ALL)
+    b = E.forward(shared, cfg, payloads)
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], atol=0)
