@@ -14,7 +14,8 @@ import traceback
 
 SUITES = ("fig8_latency", "fig14_cache_speedup", "fig15_offloading",
           "table3_accuracy", "table4_pmi", "table5_e2e", "serve_throughput",
-          "stream_latency", "kernels_bench", "roofline_report")
+          "stream_latency", "tiered_latency", "kernels_bench",
+          "roofline_report")
 
 
 def main() -> None:

@@ -49,6 +49,14 @@ def random_episode(n_events: int, seed: int, *, inter_arrival: float = 1.0,
     return [Event(i, k, i * inter_arrival) for i, k in enumerate(kinds)]
 
 
+def horizon(episodes) -> float:
+    """Latest arrival time across per-session episodes — the episode-time
+    span a driver must replay (used to place mid-episode fault injections
+    at a fraction of the incident and to scale wall-clock replays)."""
+    return max((ev.arrival_time for evs in episodes.values()
+                for ev in evs), default=0.0)
+
+
 def merge_arrivals(episodes):
     """Interleave per-session episodes into one global arrival stream:
     ``{sid: [Event]} -> [(arrival_time, sid, Event)]`` sorted by time

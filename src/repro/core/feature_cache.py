@@ -72,6 +72,11 @@ class FeatureCache:
             out[m] = e.feature
         return out
 
+    def peek(self, session: str, modality: str):
+        """Non-counting, non-asserting read — for replica bookkeeping
+        (byte accounting, eviction scans), not the serving fuse path."""
+        return self._store.get((session, modality))
+
     def touch(self, session: str, modality: str, step: int):
         """Re-stamp an entry (edge returned it alongside a result)."""
         e = self._store.get((session, modality))
@@ -81,6 +86,14 @@ class FeatureCache:
     def drop_tier(self, tier: str):
         """Invalidate entries held only by a crashed tier."""
         self._store = {k: v for k, v in self._store.items() if v.tier != tier}
+
+    def drop_session(self, session: str) -> int:
+        """Evict every modality entry of one session key (cross-incident
+        session eviction); returns how many entries were dropped."""
+        keys = [k for k in self._store if k[0] == session]
+        for k in keys:
+            del self._store[k]
+        return len(keys)
 
     def __contains__(self, key):
         return key in self._store

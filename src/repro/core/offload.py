@@ -41,9 +41,25 @@ class ProfileTable:
 
 @dataclass
 class BandwidthTrace:
-    """Piecewise bandwidth over time (bytes/s). Models EMT mobility:
-    walking away from the manpack degrades glass-edge WiFi."""
+    """Piecewise-CONSTANT bandwidth over time (bytes/s). Models EMT
+    mobility: walking away from the manpack degrades glass-edge WiFi.
+
+    ``at(t)`` is right-continuous: it returns the value of the last
+    point whose time is <= ``t`` (a new measurement takes effect exactly
+    at its timestamp). At or before the first point it clamps to the
+    first point's value — the trace's earliest measurement extends
+    backwards, so probing ``t < points[0][0]`` is well-defined instead
+    of silently depending on bisect's underflow behavior. Points are
+    sorted at construction (last write wins on duplicate timestamps) and
+    an empty trace is rejected eagerly rather than failing inside a
+    lookup mid-serve."""
     points: List[Tuple[float, float]]            # (t_seconds, bytes/s)
+
+    def __post_init__(self):
+        if not self.points:
+            raise ValueError("BandwidthTrace needs at least one point")
+        self.points = sorted(self.points, key=lambda p: p[0])
+        self._ts = [p[0] for p in self.points]   # cached breakpoints
 
     @staticmethod
     def static(bw: float):
@@ -56,8 +72,7 @@ class BandwidthTrace:
                                for i, d in enumerate(distances)])
 
     def at(self, t: float) -> float:
-        ts = [p[0] for p in self.points]
-        i = max(bisect.bisect_right(ts, t) - 1, 0)
+        i = max(bisect.bisect_right(self._ts, t) - 1, 0)
         return self.points[i][1]
 
 

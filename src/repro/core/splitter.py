@@ -97,3 +97,33 @@ def profile(split_model: SplitModel, params, sample_batch: dict,
     times["tail"] = bench(split_model.tail, params, feats)
     times["full"] = bench(split_model.full, params, sample_batch)
     return times
+
+
+def payload_nbytes(tree) -> int:
+    """Serialized size in bytes of a pytree of device/NumPy arrays:
+    ``size * itemsize`` per array leaf, 8 bytes per scalar. THE one
+    byte-sizing rule — the tier transport charges with it and the
+    benchmarks report with it, so the two can never diverge."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", None)
+        if itemsize is not None and hasattr(leaf, "size"):
+            total += int(leaf.size) * int(itemsize)
+        else:
+            total += 8
+    return total
+
+
+def feature_sizes(split_model: SplitModel, params,
+                  sample_batch: dict) -> Dict[str, int]:
+    """On-wire bytes of each modality's encoded feature (and the tail's
+    head outputs under ``"outputs"``) for a representative batch — what
+    the tiered runtime's downlink actually ships, sized from the real
+    arrays by :func:`payload_nbytes` rather than guessed. Complements
+    :func:`profile` the way the transport complements the profile-table
+    clock."""
+    feats = {m: split_model.encoders[m](params, sample_batch[m])
+             for m in split_model.modalities()}
+    sizes = {m: payload_nbytes(f) for m, f in feats.items()}
+    sizes["outputs"] = payload_nbytes(split_model.tail(params, feats))
+    return sizes

@@ -5,12 +5,23 @@ concurrent sessions through the coalescing BatchedEMSServe fast path
 and prints per-flush stats. ``--stream N`` serves N concurrent sessions
 with *asynchronously arriving modalities* through StreamingEMSServe,
 printing every progressive (partial -> final) prediction and the
-per-session time-to-first/final-prediction summary.
+per-session time-to-first/final-prediction summary. ``--tiered N``
+hosts the split pieces on glass/edge simulated-clock tiers through
+TieredEMSServe — live per-event offload decisions, byte-accounted
+feature transport, and (with ``--outage-at``) an edge crash with
+heartbeat-detected on-glass failover. ``--wall-clock`` pumps the
+``--stream``/``--tiered`` modes from a monotonic clock
+(``serving.event_loop.WallClockDriver``) instead of replaying episode
+time manually; ``--speed`` fast-forwards the replay.
 
   PYTHONPATH=src python -m repro.launch.serve --episode 1 --mobility
   PYTHONPATH=src python -m repro.launch.serve --episode 2 --no-cache
   PYTHONPATH=src python -m repro.launch.serve --batched 8
   PYTHONPATH=src python -m repro.launch.serve --stream 4 --scenario mix
+  PYTHONPATH=src python -m repro.launch.serve --stream 4 --wall-clock \
+      --deadline-ms 50 --speed 10
+  PYTHONPATH=src python -m repro.launch.serve --tiered 4 --mobility
+  PYTHONPATH=src python -m repro.launch.serve --tiered 2 --outage-at 4
 """
 from __future__ import annotations
 
@@ -47,6 +58,25 @@ def sample_payloads(cfg, seed=0):
     }
 
 
+def build_zoo(cfg, seed=0):
+    """Subset-model zoo over ONE shared parameter pytree (streaming /
+    tiered modes)."""
+    from repro.core import emsnet_zoo, split
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(seed))
+    return splits, {k: shared for k in zoo}
+
+
+def scenario_episodes(n_sessions, scenario, *, n_vitals=4, n_scene=2):
+    from repro.core import async_episode
+    names = (["text_first", "vitals_first", "scene_late"]
+             if scenario == "mix" else [scenario])
+    return {f"s{i}": async_episode(names[i % len(names)], seed=i,
+                                   n_vitals=n_vitals, n_scene=n_scene)
+            for i in range(n_sessions)}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episode", type=int, default=1, choices=[1, 2, 3])
@@ -68,6 +98,18 @@ def main():
                     help="--stream: coalesce arrivals within this window "
                          "of episode time before flushing (0 = flush "
                          "per arrival)")
+    ap.add_argument("--tiered", type=int, default=0, metavar="N",
+                    help="serve N concurrent async-modality sessions via "
+                         "TieredEMSServe (glass/edge split placement on "
+                         "simulated-clock tiers)")
+    ap.add_argument("--outage-at", type=float, default=-1.0, metavar="S",
+                    help="--tiered: kill the edge at episode second S "
+                         "(heartbeat-detected on-glass failover)")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="--stream/--tiered: replay arrivals and pump "
+                         "deadline flushes from a monotonic clock")
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="--wall-clock: episode seconds per wall second")
     args = ap.parse_args()
 
     from repro.configs.emsnet import config as emsnet_config
@@ -77,27 +119,68 @@ def main():
 
     cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
 
-    if args.stream:
-        from repro.core import async_episode, emsnet_zoo, split
-        from repro.serving.stream_engine import StreamingEMSServe
-        zoo = emsnet_zoo(cfg)
-        splits = {k: split(m) for k, m in zoo.items()}
-        shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
-        params = {k: shared for k in zoo}
+    if args.tiered:
+        from repro.serving.tiered_runtime import TieredEMSServe
+        splits, params = build_zoo(cfg)
         payloads = sample_payloads(cfg)
-        names = (["text_first", "vitals_first", "scene_late"]
-                 if args.scenario == "mix" else [args.scenario])
-        eps = {f"s{i}": async_episode(names[i % len(names)], seed=i,
-                                      n_vitals=4, n_scene=2)
-               for i in range(args.stream)}
+        full = splits["text+vitals+scene"]
+        base = profile(full, params["text+vitals+scene"], payloads, iters=3)
+        if args.mobility:
+            dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
+            trace = BandwidthTrace.walk(dist, nlos_bandwidth, period=1.0)
+        else:
+            trace = BandwidthTrace.static(nlos_bandwidth(5.0))
+        eps = scenario_episodes(args.tiered, args.scenario)
+        eng = TieredEMSServe(splits, params,
+                             profile=ProfileTable(base=base), trace=trace,
+                             share_encoders=True, max_history=None)
+        if args.outage_at >= 0:
+            eng.inject_edge_crash(args.outage_at)
+        payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
+        if args.wall_clock:
+            from repro.serving.event_loop import WallClockDriver
+            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
+        else:
+            eng.run_arrivals(eps, payload_fn)
+        for r in eng.records:
+            fb = " !! failover" if r.fallback else ""
+            print(f"[{r.sid:4s} {r.index:2d}] {r.modality:6s} "
+                  f"tier={r.tier:5s} {r.kind:7s} "
+                  f"up={r.uplink_s*1e3:6.1f}ms "
+                  f"compute={r.compute_s*1e3:7.1f}ms "
+                  f"down={r.downlink_s*1e3:6.1f}ms "
+                  f"latency={r.latency_s*1e3:8.1f}ms{fb}")
+        pc = eng.placement_counts()
+        ts = eng.transport_stats()
+        print(f"\n{args.tiered} sessions, {eng.events_total} arrivals: "
+              f"{pc['edge']} offloaded / {pc['glass']} on-glass / "
+              f"{pc['fallbacks']} crash failovers")
+        print(f"cumulative serving latency {eng.total_latency_s()*1e3:.1f} ms"
+              f" | uplink {ts['uplink']['bytes']/1e6:.2f} MB in "
+              f"{ts['uplink']['msgs']} msgs | downlink "
+              f"{ts['downlink']['bytes']/1e3:.1f} KB in "
+              f"{ts['downlink']['msgs']} msgs")
+        return
+
+    if args.stream:
+        from repro.serving.stream_engine import StreamingEMSServe
+        splits, params = build_zoo(cfg)
+        payloads = sample_payloads(cfg)
+        eps = scenario_episodes(args.stream, args.scenario)
         eng = StreamingEMSServe(
-            splits, params, share_encoders=True, deadline_s=None,
+            splits, params, share_encoders=True,
+            deadline_s=(args.deadline_ms / 1e3 if args.wall_clock else None),
             bucketer=Bucketer(max_buckets={"vitals": cfg.vitals_len,
                                            "text": cfg.max_text_len}),
             batch_bucket_min=min(8, args.stream),
             max_history=None)      # the trace below prints every flush
-        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
-                         sim_window=args.deadline_ms / 1e3)
+        payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
+        if args.wall_clock:
+            from repro.serving.event_loop import WallClockDriver
+            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
+        else:
+            eng.run_arrivals(eps, payload_fn,
+                             sim_window=args.deadline_ms / 1e3)
         for f in eng.flushes:
             for p in f.predictions:
                 proto = int(jnp.argmax(p.outputs["protocol_logits"]))

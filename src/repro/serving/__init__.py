@@ -4,8 +4,20 @@
   * ``batch_engine.BatchedEMSServe`` — multi-session, shape-bucketed,
     dispatch-async batch flushes (complete events);
   * ``stream_engine.StreamingEMSServe`` — async-modality streaming with
-    progressive partial->final predictions and deadline-driven flushes.
+    progressive partial->final predictions, deadline-driven flushes,
+    and cross-incident session eviction;
+  * ``tiered_runtime.TieredEMSServe`` — glass<->edge split placement on
+    simulated-clock tiers: live offload decisions, byte-accounted
+    feature transport, edge-crash fault tolerance;
+  * ``transport`` — in-order byte-accounting tier links;
+  * ``event_loop.WallClockDriver`` — monotonic-clock deadline pumping
+    for the streaming/tiered engines.
 """
 from .batch_engine import BatchedEMSServe, FlushReport  # noqa: F401
+from .event_loop import LoopStats, WallClockDriver  # noqa: F401
 from .stream_engine import (Prediction, StreamFlushReport,  # noqa: F401
                             StreamingEMSServe, StreamSession)
+from .tiered_runtime import (TieredEMSServe, TieredRecord,  # noqa: F401
+                             TierHost, TierSession)
+from .transport import (Delivery, TransportChannel,  # noqa: F401
+                        payload_nbytes)

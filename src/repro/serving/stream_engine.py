@@ -72,6 +72,8 @@ class StreamSession:
     t_first_submit: Optional[float] = None
     t_first_prediction: Optional[float] = None
     t_final_prediction: Optional[float] = None
+    t_last_activity: Optional[float] = None   # last submit or emission
+    finalized: bool = False                   # has emitted a final prediction
     predictions: List[Prediction] = field(default_factory=list)
 
 
@@ -96,6 +98,17 @@ class StreamingEMSServe:
     to the caller (useful when the caller batches by simulated time).
     ``time_fn`` is injectable so tests can drive a fake clock.
 
+    Cross-incident eviction: an edge box at one incident after another
+    accumulates sessions (and their cached device features) forever
+    unless finished incidents leave. With ``idle_timeout_s`` set, a
+    session with no pending work that has been inactive that long is
+    evicted (its ``FeatureCache`` entries dropped with it); with
+    ``max_sessions`` set, the table is further trimmed LRU —
+    finalized sessions first — down to the cap. ``evicted_count``
+    counts lifetime evictions; eviction runs after every flush and on
+    ``poll()``. An evicted session that speaks again simply starts
+    fresh (a new incident for the same responder id).
+
     The runtime is meant to run indefinitely, so per-flush reports and
     per-session predictions (which hold device arrays) are retained
     only up to ``max_history`` each; lifetime totals live in running
@@ -111,6 +124,8 @@ class StreamingEMSServe:
                  max_coalesce: int = 64, batch_bucket_min: int = 1,
                  share_encoders: bool = False,
                  max_history: Optional[int] = 256,
+                 idle_timeout_s: Optional[float] = None,
+                 max_sessions: Optional[int] = None,
                  time_fn: Callable[[], float] = time.perf_counter):
         self.models = models
         self.params = params
@@ -133,6 +148,9 @@ class StreamingEMSServe:
         self.full_set = frozenset(m for sm in models.values()
                                   for m in sm.modalities())
         self.max_history = max_history
+        self.idle_timeout_s = idle_timeout_s
+        self.max_sessions = max_sessions
+        self.evicted_count = 0
         self._pending: List[Tuple[str, int, float]] = []  # (sid, idx, t_submit)
         self.flushes: List[StreamFlushReport] = []        # bounded window
         self.events_total = 0
@@ -161,6 +179,7 @@ class StreamingEMSServe:
         st.input_step[m] = st.step
         st.dirty.add(m)
         st.events_seen += 1
+        st.t_last_activity = now
         if st.t_first_submit is None:
             st.t_first_submit = now
         self.events_total += 1
@@ -174,17 +193,23 @@ class StreamingEMSServe:
         return None
 
     def poll(self, now: Optional[float] = None) -> Optional[StreamFlushReport]:
-        """Flush if the oldest pending arrival has exceeded the deadline."""
-        if not self._pending or self.deadline_s is None:
-            return None
+        """Flush if the oldest pending arrival has exceeded the deadline;
+        also the idle hook where session eviction runs."""
         now = self.time_fn() if now is None else now
-        if now - self._pending[0][2] >= self.deadline_s:
+        if self._pending and self.deadline_s is not None \
+                and now - self._pending[0][2] >= self.deadline_s:
             return self.flush()
+        self.evict_sessions(now)
         return None
 
     def drain(self) -> Optional[StreamFlushReport]:
         """Flush whatever is pending, deadline or not."""
         return self.flush() if self._pending else None
+
+    def pending_count(self) -> int:
+        """Arrivals buffered but not yet flushed (the event-loop driver
+        pumps poll() until this reaches zero)."""
+        return len(self._pending)
 
     # ------------------------------------------------------------- flush
 
@@ -301,10 +326,13 @@ class StreamingEMSServe:
             if self.max_history is not None:
                 del st.predictions[:-self.max_history]
             predictions.append(pred)
+            st.t_last_activity = t1
+            if kind == "final":
+                st.finalized = True
+                if st.t_final_prediction is None:
+                    st.t_final_prediction = t1
             if st.t_first_prediction is None:
                 st.t_first_prediction = t1
-            if kind == "final" and st.t_final_prediction is None:
-                st.t_final_prediction = t1
 
         latencies = {(sid, idx): t1 - ts for sid, idx, ts in self._pending}
         report = StreamFlushReport(
@@ -318,7 +346,48 @@ class StreamingEMSServe:
         self.flushes_total += 1
         self._enc_calls_total += n_enc
         self._tail_calls_total += n_tail
+        self.evict_sessions(t1)
         return report
+
+    # ---------------------------------------------------------- eviction
+
+    def _evict(self, sid: str):
+        for key in ([sid] if self.share_encoders
+                    else [f"{sid}:{n}" for n in self.models]):
+            self.cache.drop_session(key)
+        del self.sessions[sid]
+        self.evicted_count += 1
+
+    def evict_sessions(self, now: Optional[float] = None) -> int:
+        """Cross-incident eviction sweep; returns how many sessions
+        left. A session is evictable only when it has no pending
+        arrivals and no un-flushed dirty modalities — eviction never
+        drops work. Idle timeout first, then LRU down to
+        ``max_sessions``: least-recently-active leaves first, so a
+        finalized incident that is still streaming updates outlives an
+        abandoned partial one (finalized only breaks activity ties)."""
+        if self.idle_timeout_s is None and self.max_sessions is None:
+            return 0
+        now = self.time_fn() if now is None else now
+        pending_sids = {sid for sid, _, _ in self._pending}
+        evictable = [st for sid, st in self.sessions.items()
+                     if sid not in pending_sids and not st.dirty]
+        n0 = self.evicted_count
+        if self.idle_timeout_s is not None:
+            for st in list(evictable):
+                last = (st.t_last_activity if st.t_last_activity is not None
+                        else st.t_first_submit)
+                if last is not None and now - last >= self.idle_timeout_s:
+                    self._evict(st.sid)
+                    evictable.remove(st)
+        if self.max_sessions is not None \
+                and len(self.sessions) > self.max_sessions:
+            evictable.sort(key=lambda st: (st.t_last_activity or 0.0,
+                                           not st.finalized))
+            excess = len(self.sessions) - self.max_sessions
+            for st in evictable[:excess]:
+                self._evict(st.sid)
+        return self.evicted_count - n0
 
     # ------------------------------------------------------------- stats
 

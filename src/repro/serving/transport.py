@@ -1,0 +1,96 @@
+"""Byte-accounting feature transport between hardware tiers.
+
+The tiered runtime ships real serialized payloads between the glasses
+and the edge box: raw modality data up, encoded features + head outputs
+(and the piggybacked feature cache, per the paper's fault-tolerance
+design) back down. A :class:`TransportChannel` models one direction of
+that link on the simulated clock:
+
+  * **payload sizing** — message sizes come from the actual device
+    arrays being shipped (``payload_nbytes`` walks the pytree and sums
+    ``size * itemsize``) plus a small fixed framing overhead;
+  * **per-link latency** — every message pays a constant propagation /
+    stack-traversal latency on top of its serialization time
+    ``nbytes / bandwidth(t)``, with the bandwidth read from the same
+    :class:`~repro.core.offload.BandwidthTrace` that drives the offload
+    decisions (decisions see the *heartbeat-quantized* measurement; the
+    wire sees the true instantaneous value — the gap between the two is
+    exactly the staleness a real heartbeat monitor suffers);
+  * **in-order delivery** — a TCP-like stream: a message never overtakes
+    an earlier one, so a delivery time is clamped to be >= the previous
+    message's (head-of-line blocking under a bandwidth dip is modeled,
+    not wished away).
+
+Lifetime byte/message counters make the transport cost auditable in
+benchmark reports (``BENCH_tiered.json`` breaks them out per link).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.offload import BandwidthTrace
+# THE byte-sizing rule lives in core (the benchmarks report with it);
+# re-exported here because it is also the transport's charging rule.
+from repro.core.splitter import payload_nbytes  # noqa: F401
+
+
+@dataclass
+class Delivery:
+    """Receipt for one message pushed through a channel."""
+    t_send: float               # when the sender handed the bytes over
+    t_deliver: float            # when the receiver has the full message
+    nbytes: int
+    transfer_s: float           # serialization time (nbytes / bandwidth)
+    queued_s: float             # extra wait behind earlier in-flight messages
+
+
+@dataclass
+class TransportChannel:
+    """One direction of a glass<->edge link on the simulated clock."""
+    trace: BandwidthTrace
+    latency_s: float = 0.005            # per-message propagation latency
+    overhead_bytes: int = 64            # framing / header per message
+    name: str = "link"
+    # ---- lifetime accounting
+    bytes_sent: int = 0
+    msgs_sent: int = 0
+    busy_s: float = 0.0                 # total serialization seconds
+    _last_deliver: float = field(default=0.0, repr=False)
+    deliveries: List[Delivery] = field(default_factory=list, repr=False)
+    max_history: Optional[int] = 256
+
+    def eta(self, nbytes: int, t: float) -> float:
+        """Delivery time a ``send(nbytes, t)`` WOULD produce, without
+        mutating the channel — lets the fault path ask whether a sender
+        would still be alive when its transmission completes."""
+        transfer = (int(nbytes) + self.overhead_bytes) / self.trace.at(t)
+        return max(t + self.latency_s + transfer, self._last_deliver)
+
+    def send(self, nbytes: int, t: float) -> Delivery:
+        """Ship ``nbytes`` at simulated time ``t``; returns the receipt.
+
+        Transfer time uses the trace's true bandwidth at the send
+        instant (piecewise-constant over the transfer — the traces the
+        benchmarks sweep change on a ~1 s grid, coarser than any single
+        message here). Delivery is in-order: never earlier than the
+        previous message's delivery.
+        """
+        nbytes = int(nbytes) + self.overhead_bytes
+        transfer = nbytes / self.trace.at(t)
+        arrival = t + self.latency_s + transfer
+        queued = max(0.0, self._last_deliver - arrival)
+        d = Delivery(t_send=t, t_deliver=arrival + queued, nbytes=nbytes,
+                     transfer_s=transfer, queued_s=queued)
+        self._last_deliver = d.t_deliver
+        self.bytes_sent += nbytes
+        self.msgs_sent += 1
+        self.busy_s += transfer
+        self.deliveries.append(d)
+        if self.max_history is not None:
+            del self.deliveries[:-self.max_history]
+        return d
+
+    def stats(self) -> dict:
+        return {"name": self.name, "msgs": self.msgs_sent,
+                "bytes": self.bytes_sent, "busy_s": self.busy_s}

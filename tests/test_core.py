@@ -142,6 +142,43 @@ def test_nlos_bandwidth_monotone():
     assert all(a > b for a, b in zip(bws, bws[1:]))
 
 
+def test_bandwidth_trace_piecewise_constant_boundaries():
+    """bisect boundary semantics: right-continuous steps, clamped at
+    and before the first point, held after the last."""
+    tr = BandwidthTrace([(1.0, 10.0), (2.0, 20.0), (4.0, 40.0)])
+    assert tr.at(-5.0) == 10.0      # before the first point: clamp back
+    assert tr.at(0.0) == 10.0
+    assert tr.at(1.0) == 10.0       # exactly ON a breakpoint: its value
+    assert tr.at(1.999) == 10.0     # just before the next: old value
+    assert tr.at(2.0) == 20.0       # a new measurement applies at its t
+    assert tr.at(3.0) == 20.0
+    assert tr.at(4.0) == 40.0
+    assert tr.at(100.0) == 40.0     # after the last point: hold
+
+
+def test_bandwidth_trace_sorts_validates_and_breaks_ties():
+    # unsorted points are normalized at construction
+    tr = BandwidthTrace([(2.0, 20.0), (0.0, 5.0)])
+    assert tr.at(1.0) == 5.0 and tr.at(2.0) == 20.0
+    # duplicate timestamps: the last-listed measurement wins
+    tr = BandwidthTrace([(0.0, 1.0), (1.0, 2.0), (1.0, 3.0)])
+    assert tr.at(1.0) == 3.0 and tr.at(1.5) == 3.0
+    # an empty trace fails eagerly, not inside a lookup mid-serve
+    with pytest.raises(ValueError):
+        BandwidthTrace([])
+
+
+def test_heartbeat_monitor_sees_quantized_trace_at_boundaries():
+    """The monitor samples on the heartbeat grid: a bandwidth change at
+    t=1.0 is visible exactly from the 1.0 tick, not before."""
+    tr = BandwidthTrace([(0.0, 100.0), (1.0, 200.0)])
+    mon = HeartbeatMonitor(tr, period=1.0)
+    assert mon.bandwidth(0.999) == 100.0
+    assert mon.bandwidth(1.0) == 200.0
+    # delta_t uses the same quantized measurement
+    assert mon.delta_t(400, 1.3) == pytest.approx(2.0)
+
+
 # -------------------------------------------------------------- episodes
 
 def test_table6_matches_paper():

@@ -90,6 +90,51 @@ def test_offload_decision_consistent(bw, base_t, payload):
     assert (d.tier == "edge") == (edge_cost < glass_cost)
 
 
+def _static_decision(bw, base_t, payload):
+    pol = AdaptiveOffloadPolicy(
+        ProfileTable(base={"m": base_t}),
+        HeartbeatMonitor(BandwidthTrace.static(bw)))
+    return pol.decide("m", payload, now=0.0).tier
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e3, 1e9), st.floats(1e3, 1e9),
+       st.floats(1e-4, 10.0), st.integers(1, 10**7))
+def test_offload_decision_monotone_in_bandwidth(bw_a, bw_b, base_t, payload):
+    """More bandwidth can only flip glass -> edge, never the reverse:
+    the offloaded set is upward-closed in bandwidth."""
+    lo, hi = sorted((bw_a, bw_b))
+    if _static_decision(lo, base_t, payload) == "edge":
+        assert _static_decision(hi, base_t, payload) == "edge"
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e3, 1e9), st.floats(1e-4, 10.0),
+       st.integers(1, 10**7), st.integers(1, 10**7))
+def test_offload_decision_monotone_in_payload(bw, base_t, pay_a, pay_b):
+    """A bigger payload can only flip edge -> glass, never the reverse:
+    the offloaded set is downward-closed in payload size."""
+    small, big = sorted((pay_a, pay_b))
+    if _static_decision(bw, base_t, big) == "edge":
+        assert _static_decision(bw, base_t, small) == "edge"
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e-4, 10.0), st.floats(1.0, 100.0),
+       st.integers(1, 10**7))
+def test_offload_never_chosen_when_edge_slower_at_infinite_bw(
+        base_t, slowdown, tiny_payload):
+    """If the 'edge' tier is no faster than the 'glass' tier, even free
+    transfer (infinite bandwidth, Δt -> 0) must not offload: Δt + t^e <
+    t^g is unsatisfiable with t^e >= t^g and Δt > 0."""
+    factors = {"g": 1.0, "e": float(slowdown)}    # edge >= glass cost
+    prof = ProfileTable(base={"m": base_t}, factors=factors, host_tier="e")
+    pol = AdaptiveOffloadPolicy(
+        prof, HeartbeatMonitor(BandwidthTrace.static(1e30)),
+        glass_tier="g", edge_tier="e")
+    assert pol.decide("m", tiny_payload, now=0.0).tier == "glass"
+
+
 _CACHE_OPS = st.lists(st.tuples(
     st.sampled_from(["put", "touch", "get", "features", "drop"]),
     st.sampled_from(["text", "vitals", "scene"]),

@@ -233,3 +233,75 @@ def test_partial_forward_full_subset_equals_forward(zoo_models):
     b = E.forward(shared, cfg, payloads)
     for k in b:
         np.testing.assert_allclose(a[k], b[k], atol=0)
+
+
+# ---------------------------------------------- cross-incident eviction
+
+def test_idle_sessions_evicted_with_their_cache_entries(zoo_models):
+    """A finalized incident that goes quiet leaves the session table AND
+    the FeatureCache once idle_timeout_s passes; live sessions stay."""
+    cfg, splits, shared, params, payloads = zoo_models
+    now = {"t": 0.0}
+    eng = _engine(cfg, splits, params, idle_timeout_s=5.0,
+                  time_fn=lambda: now["t"])
+    for i, m in enumerate(ALL):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    assert eng.sessions["s0"].finalized
+    cache_before = len(eng.cache)
+    assert cache_before >= 3
+    now["t"] = 3.0
+    eng.submit("s1", Event(0, "text", 3.0), payloads["text"])
+    assert eng.poll() is None and "s0" in eng.sessions   # not idle yet
+    now["t"] = 8.5                    # s0 idle 8.5s, s1 idle 5.5s
+    eng.poll()
+    assert "s0" not in eng.sessions and "s1" not in eng.sessions
+    assert eng.evicted_count == 2
+    assert len(eng.cache) == 0        # every entry left with its session
+    # an evicted responder id that speaks again is a fresh incident
+    rep = eng.submit("s0", Event(0, "vitals", 9.0), payloads["vitals"])
+    assert rep.predictions[0].modalities == ("vitals",)
+    assert eng.sessions["s0"].step == 1
+
+
+def test_lru_eviction_is_recency_primary_and_respects_cap(zoo_models):
+    """Over max_sessions, the sweep evicts the least-recently-active
+    evictable session — a finalized incident still streaming updates
+    outlives an abandoned partial one (finalized only breaks ties)."""
+    cfg, splits, shared, params, payloads = zoo_models
+    now = {"t": 0.0}
+    eng = _engine(cfg, splits, params, max_sessions=2,
+                  time_fn=lambda: now["t"])
+    for i, m in enumerate(ALL):      # s0: finalized, oldest activity
+        now["t"] = float(i)
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    now["t"] = 10.0
+    eng.submit("s1", Event(0, "text", 10.0), payloads["text"])   # partial
+    now["t"] = 11.0
+    eng.submit("s2", Event(0, "text", 11.0), payloads["text"])   # partial
+    assert "s0" not in eng.sessions          # least recently active left
+    assert set(eng.sessions) == {"s1", "s2"}
+    assert eng.evicted_count == 1
+    # an ACTIVE finalized session outlives an idle partial one: s1 goes
+    # quiet while s2 keeps refreshing vitals, then s3 overflows the cap
+    now["t"] = 20.0
+    eng.submit("s2", Event(1, "vitals", 20.0), payloads["vitals"])
+    now["t"] = 21.0
+    eng.submit("s3", Event(0, "scene", 21.0), payloads["scene"])
+    assert "s1" not in eng.sessions          # idle partial evicted
+    assert set(eng.sessions) == {"s2", "s3"}
+
+
+def test_eviction_never_drops_pending_or_dirty_work(zoo_models):
+    """Sessions with buffered arrivals are not evictable even when the
+    table is over the cap."""
+    cfg, splits, shared, params, payloads = zoo_models
+    now = {"t": 0.0}
+    eng = _engine(cfg, splits, params, max_sessions=1, deadline_s=None,
+                  time_fn=lambda: now["t"])
+    eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    eng.submit("s1", Event(0, "vitals", 0.0), payloads["vitals"])
+    assert eng.evict_sessions(now["t"]) == 0       # both have pending work
+    assert set(eng.sessions) == {"s0", "s1"}
+    eng.flush()            # drains the work; the flush's own sweep trims
+    assert len(eng.sessions) == 1
+    assert eng.evicted_count == 1

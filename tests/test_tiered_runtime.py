@@ -1,0 +1,290 @@
+"""Tiered glass<->edge split-serving runtime: placement parity,
+transport byte accounting, heartbeat crash detection + on-glass
+failover with cache recovery, and the wall-clock event-loop driver.
+
+The load-bearing invariant (ISSUE acceptance): TieredEMSServe's
+predictions equal the monolithic ``SplitModel.full`` baseline for EVERY
+tier placement — adaptive, forced-glass, forced-edge — including after
+an injected edge crash mid-episode, with the feature cache's <=1-step
+staleness invariant asserted live on every re-fusion.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthTrace, ProfileTable, emsnet_zoo,
+                        nlos_bandwidth, split)
+from repro.core.episodes import Event, async_episode
+from repro.models import emsnet as E
+from repro.serving.event_loop import WallClockDriver
+from repro.serving.tiered_runtime import TieredEMSServe, TierHost
+from repro.serving.transport import TransportChannel, payload_nbytes
+
+ALL = ("text", "vitals", "scene")
+
+BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
+        "tail": 0.005, "full": 0.15}
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+def _engine(splits, params, *, bw_m=0.0, trace=None, **kw):
+    kw.setdefault("share_encoders", True)
+    return TieredEMSServe(
+        splits, params, profile=ProfileTable(base=dict(BASE)),
+        trace=trace or BandwidthTrace.static(nlos_bandwidth(bw_m)), **kw)
+
+
+def _episode():
+    return [Event(i, m, float(i)) for i, m in enumerate(ALL)]
+
+
+def _assert_close(got, want, atol=1e-5):
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], atol=atol)
+
+
+# --------------------------------------------- tiered <-> monolithic parity
+
+@pytest.mark.parametrize("force", [None, "glass", "edge"],
+                         ids=["adaptive", "all-glass", "all-edge"])
+def test_every_placement_matches_monolithic_full(force, zoo_models):
+    """Placement changes the clock, never the math: final outputs equal
+    the one-shot full forward, intermediates equal partial_forward."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, force=force)
+    for ev in _episode():
+        rec = eng.submit("s0", ev, payloads[ev.modality])
+        assert rec.outputs is not None
+        subset = ALL[:ev.index + 1]
+        want = E.partial_forward(shared, cfg, payloads, subset)
+        _assert_close(rec.outputs, want)
+        if force is not None:
+            assert rec.tier == force
+    final = eng.sessions["s0"].records[-1]
+    assert final.kind == "final"
+    _assert_close(final.outputs, E.forward(shared, cfg, payloads))
+
+
+def test_parity_after_midepisode_edge_crash(zoo_models):
+    """Edge dies while an offload is in flight: the runtime detects the
+    missed heartbeat, re-runs on glass, resumes from the cache (<=1-step
+    staleness asserted by every re-fusion), and the outputs still match
+    the monolithic baseline bit for bit."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0)   # great link: everything edge
+    # crash while the 3rd arrival's offload is in flight (dispatched at
+    # t=2.0, edge compute finishes ~2.19): the result never comes back
+    eng.inject_edge_crash(2.1)
+    for ev in _episode():
+        rec = eng.submit("s0", ev, payloads[ev.modality])
+        assert rec.outputs is not None
+        _assert_close(rec.outputs,
+                      E.partial_forward(shared, cfg, payloads,
+                                        ALL[:ev.index + 1]))
+    recs = eng.sessions["s0"].records
+    assert [r.tier for r in recs] == ["edge", "edge", "glass"]
+    assert recs[2].fallback and eng.fallback_count == 1
+    assert eng.edge_known_dead
+    # detection waited for the first missed heartbeat after the crash
+    assert eng.detect_at == 3.0
+    assert recs[2].t_start >= eng.detect_at
+    # post-crash serving is pinned on-glass
+    rec = eng.submit("s0", Event(3, "vitals", 3.0), payloads["vitals"])
+    assert rec.tier == "glass" and not rec.fallback
+    _assert_close(eng.sessions["s0"].records[-1].outputs,
+                  E.forward(shared, cfg, payloads))
+
+
+def test_crash_before_detection_window_pays_timeout(zoo_models):
+    """An arrival in the undetected window (crash happened, heartbeat
+    not yet missed) dispatches to the dead edge and stalls until the
+    detection tick before falling back."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0, hb_period=1.0)
+    eng.inject_edge_crash(0.25)
+    rec = eng.submit("s0", Event(0, "text", 0.5), payloads["text"])
+    assert rec.tier == "glass" and rec.fallback
+    assert rec.detect_s == pytest.approx(0.5)      # stalled 0.5 -> 1.0
+    assert rec.t_start >= 1.0
+    _assert_close(rec.outputs,
+                  E.partial_forward(shared, cfg, payloads, ("text",)))
+
+
+def test_crash_during_downlink_transfer_loses_result(zoo_models):
+    """The edge must survive through the END of its downlink
+    transmission: a death mid-transfer loses the result (no delivery,
+    no glass-cache commit) and triggers the same failover path as one
+    mid-encode."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0, link_latency_s=0.5)
+    # edge compute done ~0.65s, downlink delivers ~1.15s: die between
+    eng.inject_edge_crash(0.9)
+    rec = eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec.fallback and rec.tier == "glass"
+    assert eng.downlink.msgs_sent == 0           # nothing ever arrived
+    assert eng.cache.peek("s0", "text").tier == "glass"
+    _assert_close(rec.outputs,
+                  E.partial_forward(shared, cfg, payloads, ("text",)))
+
+
+def test_adaptive_beats_forced_placements_on_the_clock(zoo_models):
+    """Simulated-clock sanity: adaptive <= forced glass at close range,
+    adaptive <= forced edge under a degraded link."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = {f"s{i}": async_episode("text_first", seed=i, n_vitals=3,
+                                  n_scene=2) for i in range(2)}
+
+    def total(trace, force):
+        eng = _engine(splits, params, trace=trace, force=force)
+        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality])
+        return eng.total_latency_s()
+
+    near = BandwidthTrace.static(nlos_bandwidth(0.0))
+    far = BandwidthTrace.static(nlos_bandwidth(60.0))
+    assert total(near, None) < total(near, "glass")
+    assert total(far, None) <= total(far, "edge") * 1.05
+
+
+def test_offload_ships_bytes_and_fallback_does_not(zoo_models):
+    """Byte accounting: edge placements pay uplink (raw payload + cache
+    sync) and downlink (feature + outputs); a crashed offload wastes the
+    uplink but ships nothing back."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0)
+    eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    up0, down0 = eng.uplink.msgs_sent, eng.downlink.msgs_sent
+    assert up0 == 1 and down0 == 1
+    # downlink carried the text feature + the 3 head outputs
+    feat = eng.cache.peek("s0", "text").feature
+    outs = eng.sessions["s0"].records[0].outputs
+    want = (payload_nbytes(feat) + payload_nbytes(outs)
+            + eng.downlink.overhead_bytes)
+    assert eng.downlink.bytes_sent == want
+    eng.inject_edge_crash(0.9)
+    eng.submit("s0", Event(1, "vitals", 0.95), payloads["vitals"])
+    assert eng.sessions["s0"].records[-1].fallback
+    assert eng.uplink.msgs_sent == up0 + 1        # wasted dispatch
+    assert eng.downlink.msgs_sent == down0        # nothing came back
+
+
+def test_edge_replica_sync_only_ships_stale_features(zoo_models):
+    """The uplink re-ships a cached feature to the edge only when the
+    edge replica is stale: two consecutive edge re-fusions of the same
+    modalities sync nothing the second time."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0)
+    for ev in _episode():
+        eng.submit("s0", ev, payloads[ev.modality])
+    b0 = eng.uplink.bytes_sent
+    # vitals re-arrival: the edge already holds text+scene features
+    eng.submit("s0", Event(3, "vitals", 4.0), payloads["vitals"])
+    shipped = eng.uplink.bytes_sent - b0
+    vitals_declared = splits["vitals"].module.payload_bytes["vitals"]
+    assert shipped == vitals_declared + eng.uplink.overhead_bytes
+
+
+# ------------------------------------------------------------- transport
+
+def test_transport_in_order_delivery_under_bandwidth_dip():
+    """A message sent during a bandwidth dip blocks the next one: the
+    later send cannot be delivered before the earlier (TCP-like)."""
+    tr = BandwidthTrace([(0.0, 1000.0), (1.0, 10.0), (2.0, 1000.0)])
+    ch = TransportChannel(tr, latency_s=0.0, overhead_bytes=0)
+    slow = ch.send(100, 1.0)          # 10 s of serialization at 10 B/s
+    fast = ch.send(100, 2.1)          # would take 0.1 s on its own
+    assert slow.t_deliver == pytest.approx(11.0)
+    assert fast.t_deliver >= slow.t_deliver
+    assert fast.queued_s > 0
+    assert ch.bytes_sent == 200 and ch.msgs_sent == 2
+
+
+def test_payload_nbytes_counts_pytree_leaves():
+    tree = {"x": jnp.zeros((2, 3), jnp.float32),
+            "len": jnp.zeros((2,), jnp.int32), "scalar": 1.5}
+    assert payload_nbytes(tree) == 2 * 3 * 4 + 2 * 4 + 8
+
+
+def test_tier_host_occupies_serially():
+    host = TierHost("edge", "edge4c", ProfileTable(base=dict(BASE)))
+    s0, d0 = host.occupy(1.0, 0.0)
+    s1, d1 = host.occupy(1.0, 0.5)      # arrives while busy -> queues
+    assert (s0, d0) == (0.0, 1.0)
+    assert (s1, d1) == (1.0, 2.0)
+    assert host.busy_s == pytest.approx(2.0)
+
+
+# ------------------------------------------------- wall-clock event loop
+
+class FakeClock:
+    """Deterministic wall clock: sleep() advances it."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += max(dt, 1e-4)
+
+
+def test_wall_clock_driver_fires_deadline_flush_in_a_lull(zoo_models):
+    """The trailing arrivals of a lull flush when their deadline expires
+    on the monotonic clock — no manual tick() anywhere."""
+    from repro.serving.stream_engine import StreamingEMSServe
+    cfg, splits, shared, params, payloads = zoo_models
+    clk = FakeClock()
+    eng = StreamingEMSServe(splits, params, share_encoders=True,
+                            deadline_s=0.5, time_fn=clk)
+    eps = {"s0": [Event(0, "text", 0.0), Event(1, "vitals", 0.1)]}
+    drv = WallClockDriver(eng, clock=clk, sleep_fn=clk.sleep,
+                          poll_interval_s=0.05)
+    stats = drv.run(eps, lambda sid, ev: payloads[ev.modality])
+    assert stats.arrivals == 2
+    # the flush came from a poll after the deadline, not from a submit
+    assert stats.flushes_fired >= 1
+    assert eng.flushes_total == 1
+    pred = eng.sessions["s0"].predictions[-1]
+    assert pred.modalities == ("text", "vitals")
+    _assert_close(pred.outputs,
+                  E.partial_forward(shared, cfg, payloads,
+                                    ("text", "vitals")))
+
+
+def test_wall_clock_driver_paces_tiered_runtime(zoo_models):
+    """The driver drives TieredEMSServe arrival by arrival (poll is a
+    no-op there) and produces the same records as a direct replay."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = {"s0": _episode()}
+
+    clk = FakeClock()
+    eng = _engine(splits, params, bw_m=5.0)
+    WallClockDriver(eng, clock=clk, sleep_fn=clk.sleep,
+                    speed=10.0).run(eps, lambda s, ev: payloads[ev.modality])
+
+    ref = _engine(splits, params, bw_m=5.0)
+    ref.run_arrivals(eps, lambda s, ev: payloads[ev.modality])
+
+    assert len(eng.records) == len(ref.records) == 3
+    for a, b in zip(eng.records, ref.records):
+        assert (a.tier, a.kind, a.t_emit) == (b.tier, b.kind, b.t_emit)
+        _assert_close(a.outputs, b.outputs)
