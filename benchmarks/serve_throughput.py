@@ -1,5 +1,6 @@
-"""Multi-session serving throughput: BatchedEMSServe vs looping the
-per-event EMSServe (the paper's single-responder engine) over N
+"""Multi-session serving throughput: the unified engine's batch
+construction (``serving.api.build_engine(..., "batch")``) vs looping
+the per-event EMSServe (the paper's single-responder engine) over N
 concurrent sessions.
 
 Workload: every session streams an EMS episode — symptom text first
@@ -74,7 +75,7 @@ def _pctl(xs, q):
 
 def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
     from repro.core import Bucketer, EMSServe
-    from repro.serving.batch_engine import BatchedEMSServe
+    from repro.serving.api import build_engine
 
     n_sessions = n_sessions or (8 if quick else 32)
     n_ticks = n_ticks or (16 if quick else 48)
@@ -113,10 +114,11 @@ def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
     base_compiles_end = next(iter(engines.values())).compile_count()
     n_timed_events = sum(len(ev) - warmup_ticks for ev in eps.values())
 
-    # ------- batched, bucketed, dispatch-async engine
-    beng = BatchedEMSServe(splits_b, params_b,
-                           bucketer=Bucketer(max_buckets=max_buckets),
-                           batch_bucket_min=min(8, n_sessions))
+    # ------- batched, bucketed, dispatch-async engine (unified API)
+    beng = build_engine(splits_b, params_b, "batch",
+                        bucketer=Bucketer(max_buckets=max_buckets),
+                        batch_bucket_min=min(8, n_sessions),
+                        max_history=None)
 
     def tick(t):
         for sid, events in eps.items():

@@ -82,9 +82,10 @@ def _stats(xs):
 
 def _stream_engine(cfg, splits, params, n_sessions):
     from repro.core import Bucketer
-    from repro.serving.stream_engine import StreamingEMSServe
-    return StreamingEMSServe(
-        splits, params, share_encoders=True, deadline_s=0.0,
+    from repro.serving.api import build_engine
+    return build_engine(
+        splits, params, "batch+stream", share_encoders=True,
+        deadline_s=0.0,
         bucketer=Bucketer(max_buckets={"vitals": 8,
                                        "text": cfg.max_text_len}),
         batch_bucket_min=min(8, n_sessions))
@@ -190,8 +191,11 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
             and all(ttfp[sid] < complete[sid] for sid in eps),
     }
 
+    # the committed artifact is the QUICK-mode workload; a smoke run
+    # (CI gate, smaller episodes) must not silently clobber it
     ART.mkdir(parents=True, exist_ok=True)
-    (ART / "BENCH_streaming.json").write_text(json.dumps(result, indent=2))
+    name = "BENCH_streaming.smoke.json" if smoke else "BENCH_streaming.json"
+    (ART / name).write_text(json.dumps(result, indent=2))
 
     C.csv_row("stream_ttfp_mean", ttfp_s["mean_ms"] * 1e3,
               f"ttfinal_mean_ms={ttf_s['mean_ms']:.2f};"

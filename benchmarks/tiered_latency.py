@@ -21,12 +21,21 @@ workloads: adaptive (the paper's Δt + t^e < t^g rule), always-on-glass,
 always-edge. The comparison metric is cumulative serving latency
 (sum over arrivals of emit - arrival on the simulated clock).
 
+All engines are assembled through the unified factory
+(``serving.api.build_engine``); the ``stream_over_tiered`` section runs
+the ``"stream+tiered"`` composition — on-glass provisional partials
+from cached (<=1-step stale) features while each offload is in flight —
+that the pre-unification sibling runtimes could not express.
+
 Acceptance (checked by ``--smoke``):
   * adaptive >= 1.9x over all-on-glass on the paper's close-range
     regimes (static 0/5/10 m and mobility);
   * adaptive never worse than the best forced placement (5% slack);
   * outage: >= 1 heartbeat-detected failover, every session still ends
-    with a final prediction that matches the monolithic full forward.
+    with a final prediction that matches the monolithic full forward;
+  * composition: >= 1 glass partial emitted, partials match
+    ``partial_forward`` on their subset, finals still match the
+    monolithic full forward.
 
 -> artifacts/BENCH_tiered.json
 """
@@ -75,11 +84,11 @@ def _traces(quick):
 
 
 def _run(splits, params, profile_table, trace, eps, payloads, *,
-         force=None, crash_at=None):
-    from repro.serving.tiered_runtime import TieredEMSServe
-    eng = TieredEMSServe(splits, params, profile=profile_table,
-                         trace=trace, share_encoders=True, force=force,
-                         max_history=None)
+         force=None, crash_at=None, spec="tiered"):
+    from repro.serving.api import build_engine
+    eng = build_engine(splits, params, spec, profile=profile_table,
+                       trace=trace, share_encoders=True, force=force,
+                       max_history=None)
     eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
                      crash_at=crash_at)
     return eng
@@ -189,6 +198,56 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
               f"fallbacks={outage.fallback_count};"
               f"vs_glass={result['outage']['speedup_vs_all_glass']:.2f}x")
 
+    # ---- stream x tiered composition (unified API exclusive): while an
+    # offload is in flight, the glasses emit a provisional partial from
+    # cached (<=1-step stale) features. Run on the 10 m regime, where
+    # raw-payload-heavy uplinks make the edge round trip slower than the
+    # on-glass tail — the regime provisional partials exist for.
+    from repro.core import BandwidthTrace as _BT
+    from repro.models import emsnet as E
+    comp = _run(splits, params, table,
+                _BT.static(nlos_bandwidth(10.0)), zoo_eps, payloads,
+                spec="stream+tiered")
+    partials_ok, comp_finals_ok = True, True
+    leads = []
+    for r in comp.records:
+        gp = r.glass_partial
+        if gp is None:
+            continue
+        leads.append(r.t_emit - gp.t_emit)
+        want_p = E.partial_forward(shared, cfg, payloads,
+                                   list(gp.modalities))
+        for k in want_p:
+            if not np.allclose(gp.outputs[k], want_p[k], atol=1e-5):
+                partials_ok = False
+    for sid in zoo_eps:
+        st = comp.sessions[sid]
+        last_final = next((r for r in reversed(st.records)
+                           if r.kind == "final" and r.outputs is not None),
+                          None)
+        if last_final is None:
+            comp_finals_ok = False
+            continue
+        for k in want:
+            if not np.allclose(last_final.outputs[k], want[k], atol=1e-5):
+                comp_finals_ok = False
+    pos = [l for l in leads if l > 0]
+    result["stream_over_tiered"] = {
+        "regime": "static_10m",
+        **_summary(comp),
+        "n_glass_partials": len(leads),
+        "partials_match_partial_forward": bool(partials_ok),
+        "finals_match_monolithic_full": bool(comp_finals_ok),
+        "provisional_lead_ms": {
+            "n_positive": len(pos),
+            "mean_positive": float(np.mean(pos) * 1e3) if pos else 0.0,
+            "max": float(max(leads) * 1e3) if leads else 0.0,
+        },
+    }
+    C.csv_row("tiered_stream_composition", comp.total_latency_s() * 1e6,
+              f"partials={len(leads)};lead_pos={len(pos)};"
+              f"parity={partials_ok and comp_finals_ok}")
+
     # ---- acceptance
     paper_speedups = {r: result["regimes"][r]["speedup_adaptive_vs_glass"]
                       for r in PAPER_REGIMES if r in result["regimes"]}
@@ -201,6 +260,8 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
     result["passed_outage_recovery"] = (
         outage.edge_known_dead and outage.fallback_count >= 1
         and finals_ok and parity_ok)
+    result["passed_stream_composition"] = bool(
+        len(leads) >= 1 and partials_ok and comp_finals_ok)
 
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_tiered.json").write_text(json.dumps(result, indent=2))
@@ -208,7 +269,9 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
     if smoke:
         failed = [k for k in ("passed_speedup_1p9x",
                               "passed_adaptive_not_worse",
-                              "passed_outage_recovery") if not result[k]]
+                              "passed_outage_recovery",
+                              "passed_stream_composition")
+                  if not result[k]]
         if failed:
             raise SystemExit(f"tiered acceptance failed: {failed}; "
                              f"speedups={paper_speedups}")

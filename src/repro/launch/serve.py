@@ -1,27 +1,38 @@
-"""EMSServe serving launcher: run Table-6 episodes through the engine
-with adaptive offloading, feature caching, and (optionally) an edge
-crash, printing the per-event trace. ``--batched N`` instead serves N
-concurrent sessions through the coalescing BatchedEMSServe fast path
-and prints per-flush stats. ``--stream N`` serves N concurrent sessions
-with *asynchronously arriving modalities* through StreamingEMSServe,
-printing every progressive (partial -> final) prediction and the
-per-session time-to-first/final-prediction summary. ``--tiered N``
-hosts the split pieces on glass/edge simulated-clock tiers through
-TieredEMSServe — live per-event offload decisions, byte-accounted
-feature transport, and (with ``--outage-at``) an edge crash with
-heartbeat-detected on-glass failover. ``--wall-clock`` pumps the
-``--stream``/``--tiered`` modes from a monotonic clock
-(``serving.event_loop.WallClockDriver``) instead of replaying episode
-time manually; ``--speed`` fast-forwards the replay.
+"""EMSServe serving launcher.
+
+Default mode runs Table-6 episodes through the per-event reference
+engine (``core.engine.EMSServe``) with adaptive offloading, feature
+caching, and (optionally) an edge crash, printing the per-event trace.
+
+``--engine SPEC`` serves ``--sessions N`` concurrent sessions through
+the unified session engine (``serving.api.build_engine``), where SPEC
+is a '+'-joined subset of ``batch`` / ``stream`` / ``tiered`` —
+composable, not mutually exclusive:
 
   PYTHONPATH=src python -m repro.launch.serve --episode 1 --mobility
   PYTHONPATH=src python -m repro.launch.serve --episode 2 --no-cache
-  PYTHONPATH=src python -m repro.launch.serve --batched 8
-  PYTHONPATH=src python -m repro.launch.serve --stream 4 --scenario mix
-  PYTHONPATH=src python -m repro.launch.serve --stream 4 --wall-clock \
-      --deadline-ms 50 --speed 10
-  PYTHONPATH=src python -m repro.launch.serve --tiered 4 --mobility
-  PYTHONPATH=src python -m repro.launch.serve --tiered 2 --outage-at 4
+  PYTHONPATH=src python -m repro.launch.serve --engine batch --sessions 8
+  PYTHONPATH=src python -m repro.launch.serve --engine batch+stream \
+      --sessions 4 --scenario mix
+  PYTHONPATH=src python -m repro.launch.serve --engine stream \
+      --sessions 4 --wall-clock --deadline-ms 50 --speed 10
+  PYTHONPATH=src python -m repro.launch.serve --engine tiered \
+      --sessions 4 --mobility
+  PYTHONPATH=src python -m repro.launch.serve --engine stream+tiered \
+      --sessions 2 --outage-at 4
+
+``batch`` coalesces cross-session work into shape-bucketed batched XLA
+calls; ``stream`` adds progressive partial->final predictions,
+deadlines, and eviction; ``tiered`` hosts the split pieces on
+glass/edge simulated-clock tiers (live offload decisions, byte-
+accounted transport, ``--outage-at`` edge-crash failover).
+``stream+tiered`` additionally serves on-glass provisional partials
+while the edge computes each offloaded refresh. ``--wall-clock`` pumps
+deadline flushes from a monotonic clock
+(``serving.event_loop.WallClockDriver``); ``--speed`` fast-forwards.
+
+The pre-unification flags ``--batched/--stream/--tiered N`` still work
+as deprecation shims that map onto the equivalent ``--engine`` spec.
 """
 from __future__ import annotations
 
@@ -60,7 +71,7 @@ def sample_payloads(cfg, seed=0):
 
 def build_zoo(cfg, seed=0):
     """Subset-model zoo over ONE shared parameter pytree (streaming /
-    tiered modes)."""
+    tiered specs)."""
     from repro.core import emsnet_zoo, split
     zoo = emsnet_zoo(cfg)
     splits = {k: split(m) for k, m in zoo.items()}
@@ -77,6 +88,176 @@ def scenario_episodes(n_sessions, scenario, *, n_vitals=4, n_scene=2):
             for i in range(n_sessions)}
 
 
+def _mobility_trace(mobility: bool):
+    from repro.core import BandwidthTrace, nlos_bandwidth
+    if mobility:
+        dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
+        return BandwidthTrace.walk(dist, nlos_bandwidth, period=1.0)
+    return BandwidthTrace.static(nlos_bandwidth(5.0))
+
+
+def _print_tiered(eng, n_sessions):
+    for r in eng.records:
+        fb = " !! failover" if r.fallback else ""
+        gp = (f" (glass partial @{r.glass_partial.t_emit:6.2f}s)"
+              if r.glass_partial is not None else "")
+        print(f"[{r.sid:4s} {r.index:2d}] {r.modality:6s} "
+              f"tier={r.tier:5s} {r.kind:7s} "
+              f"up={r.uplink_s*1e3:6.1f}ms "
+              f"compute={r.compute_s*1e3:7.1f}ms "
+              f"down={r.downlink_s*1e3:6.1f}ms "
+              f"latency={r.latency_s*1e3:8.1f}ms{fb}{gp}")
+    pc = eng.placement_counts()
+    ts = eng.transport_stats()
+    print(f"\n{n_sessions} sessions, {eng.events_total} arrivals: "
+          f"{pc['edge']} offloaded / {pc['glass']} on-glass / "
+          f"{pc['fallbacks']} crash failovers")
+    print(f"cumulative serving latency {eng.total_latency_s()*1e3:.1f} ms"
+          f" | uplink {ts['uplink']['bytes']/1e6:.2f} MB in "
+          f"{ts['uplink']['msgs']} msgs | downlink "
+          f"{ts['downlink']['bytes']/1e3:.1f} KB in "
+          f"{ts['downlink']['msgs']} msgs")
+
+
+def _print_stream(eng, eps):
+    for f in eng.flushes:
+        for p in f.predictions:
+            proto = int(jnp.argmax(p.outputs["protocol_logits"]))
+            print(f"flush[{f.flush_id:3d}] {p.sid:4s} "
+                  f"{p.kind:7s} over {'+'.join(p.modalities):24s} "
+                  f"-> protocol={proto}")
+    print(f"\n{len(eps)} sessions, {eng.events_total} arrivals, "
+          f"{eng.flushes_total} flushes, "
+          f"{eng.encoder_calls_total()} encoder calls, "
+          f"XLA compiles {eng.compile_count()}")
+    for sid in sorted(eps):
+        ttfp = eng.time_to_first_prediction(sid)
+        ttf = eng.time_to_final_prediction(sid)
+        print(f"  {sid}: time-to-first {ttfp*1e3:7.1f} ms | "
+              f"time-to-final "
+              f"{'n/a' if ttf is None else f'{ttf*1e3:7.1f} ms'}")
+
+
+def _print_batch(eng, n_sessions):
+    for f in eng.flushes:
+        print(f"flush[{f.flush_id:2d}] events={f.n_events:3d} "
+              f"enc_calls={f.n_encoder_calls} tail_calls={f.n_tail_calls} "
+              f"wall={f.wall_s*1e3:7.2f}ms")
+    lats = sorted(eng.event_latencies())
+    print(f"\n{n_sessions} sessions, {eng.events_total} events in "
+          f"{eng.total_wall_s()*1e3:.1f} ms compute "
+          f"(p50 latency {lats[len(lats)//2]*1e3:.1f} ms, "
+          f"XLA compiles {eng.compile_count()}, "
+          f"cache entries {len(eng.cache)})")
+
+
+def serve_unified(args):
+    """One path for every --engine spec: build the zoo/models, assemble
+    the engine from composable policies, drive it, print the trace."""
+    from repro.configs.emsnet import config as emsnet_config
+    from repro.core import Bucketer, ProfileTable, profile, table6
+    from repro.serving.api import build_engine
+
+    cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
+    spec = parse_spec_tokens(args.engine)
+    n = args.sessions
+    tiered = "tiered" in spec
+    stream = "stream" in spec
+
+    # flag/spec mismatches fail loudly, not silently
+    if args.outage_at >= 0 and not tiered:
+        raise SystemExit("--outage-at requires a tiered spec "
+                         "(e.g. --engine stream+tiered)")
+    if args.deadline_ms and not stream:
+        raise SystemExit("--deadline-ms requires a stream spec")
+    if args.wall_clock and not (stream or tiered):
+        raise SystemExit("--wall-clock requires a stream or tiered spec")
+
+    kw = {}
+    if tiered or stream:
+        splits, params = build_zoo(cfg)          # one shared pytree
+        kw["share_encoders"] = True
+    else:
+        splits, params = build_models(cfg)       # independent m1/m2/m3
+    payloads = sample_payloads(cfg)
+    payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
+
+    if tiered:
+        full = splits["text+vitals+scene"]
+        base = profile(full, params["text+vitals+scene"], payloads, iters=3)
+        kw["profile"] = ProfileTable(base=base)
+        kw["trace"] = _mobility_trace(args.mobility)
+    if stream:
+        kw["deadline_s"] = (args.deadline_ms / 1e3 if args.wall_clock
+                            else None)
+    if "batch" in spec or stream:
+        kw["bucketer"] = Bucketer(max_buckets={"vitals": cfg.vitals_len,
+                                               "text": cfg.max_text_len})
+        kw["batch_bucket_min"] = min(8, n)
+
+    eng = build_engine(splits, params, "+".join(spec), max_history=None,
+                       **kw)
+
+    if tiered:
+        eps = scenario_episodes(n, args.scenario)
+        if args.outage_at >= 0:
+            eng.inject_edge_crash(args.outage_at)
+        if args.wall_clock:
+            from repro.serving.event_loop import WallClockDriver
+            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
+        else:
+            eng.run_arrivals(eps, payload_fn)
+        _print_tiered(eng, n)
+    elif stream:
+        eps = scenario_episodes(n, args.scenario)
+        if args.wall_clock:
+            from repro.serving.event_loop import WallClockDriver
+            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
+        else:
+            eng.run_arrivals(eps, payload_fn,
+                             sim_window=args.deadline_ms / 1e3)
+        _print_stream(eng, eps)
+    else:
+        eps = {f"s{i}": table6()[1 + i % 3] for i in range(n)}
+        eng.run_episodes(eps, payload_fn)
+        _print_batch(eng, n)
+
+
+def parse_spec_tokens(engine_arg: str):
+    """Canonical token tuple for an --engine spec string (validation is
+    re-done by api.parse_spec; this is just for mode branching)."""
+    from repro.serving.api import _SPEC_TOKENS
+    toks = []
+    for t in filter(None, (t.strip() for t in engine_arg.split("+"))):
+        canon = _SPEC_TOKENS.get(t.lower())
+        if canon is None:
+            raise SystemExit(f"--engine: unknown token {t!r} "
+                             f"(use +-joined batch/stream/tiered)")
+        if canon not in toks:
+            toks.append(canon)
+    if not toks:
+        raise SystemExit("--engine: empty spec")
+    return tuple(toks)
+
+
+def _apply_legacy_shims(args):
+    """Map the pre-unification mode flags onto --engine specs, with a
+    one-line pointer to the replacement."""
+    for flag, count, spec in (("--batched", args.batched, "batch"),
+                              ("--stream", args.stream, "stream"),
+                              ("--tiered", args.tiered, "tiered")):
+        if count:
+            if args.engine:
+                raise SystemExit(f"{flag} conflicts with --engine; "
+                                 f"use --engine alone")
+            args.engine = spec
+            args.sessions = count
+            print(f"note: {flag} N is deprecated — use "
+                  f"`--engine {spec} --sessions {count}` "
+                  f"(specs compose, e.g. --engine stream+tiered)")
+    return args
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episode", type=int, default=1, choices=[1, 2, 3])
@@ -85,153 +266,54 @@ def main():
     ap.add_argument("--mobility", action="store_true",
                     help="walk 0->30->0 m during the episode (scenario 3)")
     ap.add_argument("--crash-edge-at", type=int, default=-1)
-    ap.add_argument("--batched", type=int, default=0, metavar="N",
-                    help="serve N concurrent sessions via BatchedEMSServe")
-    ap.add_argument("--stream", type=int, default=0, metavar="N",
-                    help="serve N concurrent async-modality sessions via "
-                         "StreamingEMSServe (progressive predictions)")
+    ap.add_argument("--engine", default="", metavar="SPEC",
+                    help="unified session engine: '+'-joined subset of "
+                         "batch/stream/tiered (e.g. batch+stream, "
+                         "stream+tiered)")
+    ap.add_argument("--sessions", type=int, default=4, metavar="N",
+                    help="--engine: number of concurrent sessions")
     ap.add_argument("--scenario", default="mix",
                     choices=["mix", "text_first", "vitals_first",
                              "scene_late"],
-                    help="--stream: inter-modality lag scenario")
+                    help="stream/tiered specs: inter-modality lag scenario")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
-                    help="--stream: coalesce arrivals within this window "
-                         "of episode time before flushing (0 = flush "
-                         "per arrival)")
-    ap.add_argument("--tiered", type=int, default=0, metavar="N",
-                    help="serve N concurrent async-modality sessions via "
-                         "TieredEMSServe (glass/edge split placement on "
-                         "simulated-clock tiers)")
+                    help="stream spec: coalesce arrivals within this "
+                         "window before flushing (0 = flush per arrival)")
     ap.add_argument("--outage-at", type=float, default=-1.0, metavar="S",
-                    help="--tiered: kill the edge at episode second S "
+                    help="tiered spec: kill the edge at episode second S "
                          "(heartbeat-detected on-glass failover)")
     ap.add_argument("--wall-clock", action="store_true",
-                    help="--stream/--tiered: replay arrivals and pump "
+                    help="stream/tiered specs: replay arrivals and pump "
                          "deadline flushes from a monotonic clock")
     ap.add_argument("--speed", type=float, default=1.0,
                     help="--wall-clock: episode seconds per wall second")
-    args = ap.parse_args()
+    # ---- deprecated mode flags (shims onto --engine)
+    ap.add_argument("--batched", type=int, default=0, metavar="N",
+                    help="deprecated: --engine batch --sessions N")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="deprecated: --engine stream --sessions N")
+    ap.add_argument("--tiered", type=int, default=0, metavar="N",
+                    help="deprecated: --engine tiered --sessions N")
+    args = _apply_legacy_shims(ap.parse_args())
 
+    if args.engine:
+        serve_unified(args)
+        return
+
+    # ---- default: the per-event reference engine on a Table-6 episode
     from repro.configs.emsnet import config as emsnet_config
-    from repro.core import (AdaptiveOffloadPolicy, BandwidthTrace, Bucketer,
-                            EMSServe, HeartbeatMonitor, ProfileTable,
-                            nlos_bandwidth, profile, table6)
+    from repro.core import (AdaptiveOffloadPolicy, EMSServe,
+                            HeartbeatMonitor, ProfileTable, profile, table6)
 
     cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
-
-    if args.tiered:
-        from repro.serving.tiered_runtime import TieredEMSServe
-        splits, params = build_zoo(cfg)
-        payloads = sample_payloads(cfg)
-        full = splits["text+vitals+scene"]
-        base = profile(full, params["text+vitals+scene"], payloads, iters=3)
-        if args.mobility:
-            dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
-            trace = BandwidthTrace.walk(dist, nlos_bandwidth, period=1.0)
-        else:
-            trace = BandwidthTrace.static(nlos_bandwidth(5.0))
-        eps = scenario_episodes(args.tiered, args.scenario)
-        eng = TieredEMSServe(splits, params,
-                             profile=ProfileTable(base=base), trace=trace,
-                             share_encoders=True, max_history=None)
-        if args.outage_at >= 0:
-            eng.inject_edge_crash(args.outage_at)
-        payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
-        if args.wall_clock:
-            from repro.serving.event_loop import WallClockDriver
-            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
-        else:
-            eng.run_arrivals(eps, payload_fn)
-        for r in eng.records:
-            fb = " !! failover" if r.fallback else ""
-            print(f"[{r.sid:4s} {r.index:2d}] {r.modality:6s} "
-                  f"tier={r.tier:5s} {r.kind:7s} "
-                  f"up={r.uplink_s*1e3:6.1f}ms "
-                  f"compute={r.compute_s*1e3:7.1f}ms "
-                  f"down={r.downlink_s*1e3:6.1f}ms "
-                  f"latency={r.latency_s*1e3:8.1f}ms{fb}")
-        pc = eng.placement_counts()
-        ts = eng.transport_stats()
-        print(f"\n{args.tiered} sessions, {eng.events_total} arrivals: "
-              f"{pc['edge']} offloaded / {pc['glass']} on-glass / "
-              f"{pc['fallbacks']} crash failovers")
-        print(f"cumulative serving latency {eng.total_latency_s()*1e3:.1f} ms"
-              f" | uplink {ts['uplink']['bytes']/1e6:.2f} MB in "
-              f"{ts['uplink']['msgs']} msgs | downlink "
-              f"{ts['downlink']['bytes']/1e3:.1f} KB in "
-              f"{ts['downlink']['msgs']} msgs")
-        return
-
-    if args.stream:
-        from repro.serving.stream_engine import StreamingEMSServe
-        splits, params = build_zoo(cfg)
-        payloads = sample_payloads(cfg)
-        eps = scenario_episodes(args.stream, args.scenario)
-        eng = StreamingEMSServe(
-            splits, params, share_encoders=True,
-            deadline_s=(args.deadline_ms / 1e3 if args.wall_clock else None),
-            bucketer=Bucketer(max_buckets={"vitals": cfg.vitals_len,
-                                           "text": cfg.max_text_len}),
-            batch_bucket_min=min(8, args.stream),
-            max_history=None)      # the trace below prints every flush
-        payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
-        if args.wall_clock:
-            from repro.serving.event_loop import WallClockDriver
-            WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
-        else:
-            eng.run_arrivals(eps, payload_fn,
-                             sim_window=args.deadline_ms / 1e3)
-        for f in eng.flushes:
-            for p in f.predictions:
-                proto = int(jnp.argmax(p.outputs["protocol_logits"]))
-                print(f"flush[{f.flush_id:3d}] {p.sid:4s} "
-                      f"{p.kind:7s} over {'+'.join(p.modalities):24s} "
-                      f"-> protocol={proto}")
-        print(f"\n{args.stream} sessions, {eng.events_total} arrivals, "
-              f"{eng.flushes_total} flushes, "
-              f"{eng.encoder_calls_total()} encoder calls, "
-              f"XLA compiles {eng.compile_count()}")
-        for sid in sorted(eps):
-            ttfp = eng.time_to_first_prediction(sid)
-            ttf = eng.time_to_final_prediction(sid)
-            print(f"  {sid}: time-to-first {ttfp*1e3:7.1f} ms | "
-                  f"time-to-final "
-                  f"{'n/a' if ttf is None else f'{ttf*1e3:7.1f} ms'}")
-        return
-
     splits, params = build_models(cfg)
     payloads = sample_payloads(cfg)
 
-    if args.batched:
-        from repro.serving.batch_engine import BatchedEMSServe
-        beng = BatchedEMSServe(
-            splits, params,
-            bucketer=Bucketer(max_buckets={"vitals": cfg.vitals_len,
-                                           "text": cfg.max_text_len}),
-            batch_bucket_min=min(8, args.batched))
-        eps = {f"s{i}": table6()[1 + i % 3] for i in range(args.batched)}
-        beng.run_episodes(eps, lambda sid, ev: payloads[ev.modality])
-        for i, f in enumerate(beng.flushes):
-            print(f"flush[{i:2d}] events={f.n_events:3d} "
-                  f"enc_calls={f.n_encoder_calls} tail_calls={f.n_tail_calls} "
-                  f"wall={f.wall_s*1e3:7.2f}ms")
-        lats = sorted(beng.event_latencies())
-        print(f"\n{args.batched} sessions, {beng.events_total} events in "
-              f"{beng.total_wall_s()*1e3:.1f} ms compute "
-              f"(p50 latency {lats[len(lats)//2]*1e3:.1f} ms, "
-              f"XLA compiles {beng.compile_count()}, "
-              f"cache entries {len(beng.cache)})")
-        return
-
     base = profile(splits["m3"], params["m3"], payloads)
-    base["full"] = base["full"]
     table = ProfileTable(base=base)
-    if args.mobility:
-        dist = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
-        trace = BandwidthTrace.walk(dist, nlos_bandwidth, period=1.0)
-    else:
-        trace = BandwidthTrace.static(nlos_bandwidth(5.0))
-    policy = AdaptiveOffloadPolicy(table, HeartbeatMonitor(trace))
+    policy = AdaptiveOffloadPolicy(table,
+                                   HeartbeatMonitor(
+                                       _mobility_trace(args.mobility)))
 
     engine = EMSServe(splits, params, policy=policy,
                       cached=not args.no_cache)

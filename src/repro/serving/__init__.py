@@ -1,23 +1,50 @@
-"""Serving runtimes over the split-model zoo.
+"""One EMSServe: the unified serving layer over the split-model zoo.
 
-  * ``engine`` / ``kv_cache`` — LLM decode serving (KV-cache paths);
-  * ``batch_engine.BatchedEMSServe`` — multi-session, shape-bucketed,
-    dispatch-async batch flushes (complete events);
-  * ``stream_engine.StreamingEMSServe`` — async-modality streaming with
-    progressive partial->final predictions, deadline-driven flushes,
-    and cross-incident session eviction;
-  * ``tiered_runtime.TieredEMSServe`` — glass<->edge split placement on
-    simulated-clock tiers: live offload decisions, byte-accounted
-    feature transport, edge-crash fault tolerance;
+The heart of the package is ``api`` — canonical exchange types
+(``Arrival``, ``Prediction``, ``FlushReport``, ``SessionView``,
+``TieredRecord``) and the one multi-session runtime
+(``EMSServeEngine``) whose behavior is assembled from orthogonal,
+composable policies by the ``build_engine(models, params, spec)``
+factory:
+
+  * ``BatchPolicy`` — shape-bucketed cross-session coalescing, one
+    batched XLA call per (modality, bucket) per flush, one host sync;
+  * ``StreamPolicy`` — progressive partial->final predictions, flush
+    deadlines, cross-incident session eviction;
+  * ``PlacementPolicy`` — glass<->edge tier hosts on simulated clocks,
+    live offload decisions, byte-accounted transport, heartbeat-
+    detected edge-crash failover.
+
+Policies compose: ``build_engine(models, params, "stream+tiered", ...)``
+streams on-glass provisional partials while the edge computes finals —
+a regime none of the pre-unification sibling runtimes could express.
+
+Historical constructors remain as thin shims over the same engine:
+
+  * ``batch_engine.BatchedEMSServe`` — the ``"batch"`` construction;
+  * ``stream_engine.StreamingEMSServe`` — ``"batch+stream"``;
+  * ``tiered_runtime.TieredEMSServe`` — ``"tiered"``;
+
+plus the pieces the engine rides on:
+
   * ``transport`` — in-order byte-accounting tier links;
   * ``event_loop.WallClockDriver`` — monotonic-clock deadline pumping
-    for the streaming/tiered engines.
+    for any engine exposing ``submit``/``poll``/``drain``;
+  * ``engine`` / ``kv_cache`` — LLM decode serving (KV-cache paths),
+    unrelated to the EMS session engine.
+
+(`core.engine.EMSServe` stays the single-session per-event *reference*
+engine — the paper's Table-6 trace and the baseline every parity tier
+and benchmark compares against.)
 """
-from .batch_engine import BatchedEMSServe, FlushReport  # noqa: F401
+from .api import (Arrival, BatchPolicy, EMSServeEngine,  # noqa: F401
+                  EngineSpec, FlushReport, PlacementPolicy, Prediction,
+                  SessionView, StreamPolicy, TieredRecord, TierHost,
+                  build_engine, parse_spec)
+from .batch_engine import BatchedEMSServe, SessionState  # noqa: F401
 from .event_loop import LoopStats, WallClockDriver  # noqa: F401
-from .stream_engine import (Prediction, StreamFlushReport,  # noqa: F401
+from .stream_engine import (StreamFlushReport,  # noqa: F401
                             StreamingEMSServe, StreamSession)
-from .tiered_runtime import (TieredEMSServe, TieredRecord,  # noqa: F401
-                             TierHost, TierSession)
+from .tiered_runtime import TieredEMSServe, TierSession  # noqa: F401
 from .transport import (Delivery, TransportChannel,  # noqa: F401
                         payload_nbytes)

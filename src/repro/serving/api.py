@@ -1,0 +1,1244 @@
+"""One EMSServe: the unified session-engine API.
+
+The serving layer used to be four sibling runtimes (`core.engine.EMSServe`
+per-event reference, `BatchedEMSServe`, `StreamingEMSServe`,
+`TieredEMSServe`) with duplicated session/flush/report machinery and
+mutually exclusive launcher modes. This module replaces the three
+multi-session runtimes with ONE :class:`EMSServeEngine` whose behavior is
+assembled from orthogonal, composable policy objects:
+
+  * :class:`BatchPolicy` — cross-session coalescing: shape-bucketed
+    inputs (``core.bucketing``), power-of-two batch rows, chunked
+    batched XLA calls, one host sync per flush;
+  * :class:`StreamPolicy` — progressive partial->final predictions,
+    wall-clock flush deadlines, cross-incident session eviction
+    (idle timeout + LRU cap), and — under tiered placement — on-glass
+    provisional partials while the edge computes the refreshed result;
+  * :class:`PlacementPolicy` — glass<->edge tier hosts on simulated
+    busy-clocks, live per-arrival offload decisions through the
+    heartbeat-quantized monitor, byte-accounted in-order feature
+    transport, and heartbeat-detected edge-crash failover from the
+    versioned feature cache.
+
+Engines are built from a config spec by :func:`build_engine` (xFormers
+factory idiom: the spec is data, the factory types it):
+
+    eng = build_engine(models, params, "batch+stream")
+    eng = build_engine(models, params, "stream+tiered",
+                       profile=table, trace=trace, share_encoders=True)
+    eng = build_engine(models, params, {"batch": {"max_coalesce": 32},
+                                        "stream": {"deadline_s": 0.05}})
+
+The canonical exchange types — :class:`Arrival` in, :class:`Prediction` /
+:class:`FlushReport` / :class:`TieredRecord` out, :class:`SessionView`
+for per-session state — are shared by every composition, so batching,
+streaming, and tiering can be enabled *together*: the legacy engines are
+thin constructor shims over this class (``serving.batch_engine``,
+``serving.stream_engine``, ``serving.tiered_runtime``).
+
+`core.engine.EMSServe` remains the single-session per-event *reference*
+engine (the paper's Table-6 trace and every benchmark's baseline); the
+parity tiers assert this engine agrees with it output-for-output.
+
+Semantics of composition:
+
+  * ``batch`` alone — caller-driven flushes (``deadline_s=None``), one
+    batched encoder call per (modality, bucket) per consumer model, one
+    batched tail per selected model, ``FlushReport.recommendations``
+    per touched session (the BatchedEMSServe contract);
+  * ``stream`` adds deadline-driven flushing, ``partial``/``final``
+    tagging on every emitted :class:`Prediction`, and eviction;
+  * ``tiered`` switches intake to per-arrival placement on the
+    simulated tier clocks (offload decisions are per-event by
+    construction, so batch coalescing degrades to shape bucketing
+    there — the bucketer still bounds compile counts);
+  * ``stream+tiered`` — the composition none of the siblings could
+    express: when an arrival offloads, the glasses immediately re-fuse
+    the cached (<=1-step stale, asserted live) features into an
+    on-glass provisional partial while the edge computes the refreshed
+    prediction, so the EMT always has the freshest answer the glass can
+    produce *now* and the refined one the moment the downlink lands.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+
+from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
+from repro.core.episodes import Event, merge_arrivals
+from repro.core.feature_cache import FeatureCache
+from repro.core.offload import (AdaptiveOffloadPolicy, BandwidthTrace,
+                                Decision, HeartbeatMonitor, ProfileTable)
+from repro.core.splitter import SplitModel, select_model
+from repro.serving.transport import TransportChannel, payload_nbytes
+
+__all__ = [
+    "Arrival", "Prediction", "FlushReport", "SessionView", "TieredRecord",
+    "TierHost", "BatchPolicy", "StreamPolicy", "PlacementPolicy",
+    "EngineSpec", "EMSServeEngine", "build_engine", "parse_spec",
+]
+
+
+# ======================================================================
+# Canonical exchange types
+# ======================================================================
+
+@dataclass(frozen=True)
+class Arrival:
+    """One datum entering the engine: which session, which event, what
+    payload. ``EMSServeEngine.ingest`` consumes these; ``submit`` is the
+    unpacked form the drivers and legacy callers use."""
+    sid: str
+    event: Event
+    payload: Any = None
+
+    @property
+    def modality(self) -> str:
+        return self.event.modality
+
+    @property
+    def arrival_time(self) -> float:
+        return self.event.arrival_time
+
+    @property
+    def index(self) -> int:
+        return self.event.index
+
+
+@dataclass
+class Prediction:
+    """One progressive prediction emitted for a session.
+
+    Flush-mode predictions carry the flush that produced them in
+    ``flush_id``; tiered-mode (per-arrival) predictions carry ``-1``
+    there and stamp ``t_emit`` on the simulated tier clock instead of
+    the engine's ``time_fn``."""
+    sid: str
+    step: int                       # session step it reflects
+    model: str                      # selected model name
+    modalities: Tuple[str, ...]     # fused subset, canonical order
+    kind: str                       # "partial" | "final"
+    outputs: dict                   # head outputs (batch row for sid)
+    flush_id: int
+    t_emit: float
+
+
+@dataclass
+class FlushReport:
+    """What one flush did: arrivals drained, XLA dispatches, the single
+    host sync's wall time, per-arrival latencies, and the emissions —
+    ``predictions`` (tagged partial/final) and the last fused head
+    outputs per touched session in ``recommendations`` (the batch-mode
+    contract; identical rows, different indexing)."""
+    flush_id: int
+    n_events: int
+    n_encoder_calls: int
+    n_tail_calls: int
+    wall_s: float
+    latencies: Dict[Tuple[str, int], float]     # (sid, event idx) -> s
+    predictions: List[Prediction] = field(default_factory=list)
+    recommendations: Dict[str, dict] = field(default_factory=dict)
+
+
+@dataclass
+class SessionView:
+    """Per-session state, one shape for every composition. Flush-mode
+    engines use the intake/prediction fields; tiered placement adds the
+    simulated-clock fields (``ready_at``, ``records``, ``t_*_emit``)."""
+    sid: str
+    inputs: Dict[str, object] = field(default_factory=dict)
+    input_step: Dict[str, int] = field(default_factory=dict)
+    step: int = 0
+    dirty: set = field(default_factory=set)   # modalities changed since flush
+    events_seen: int = 0
+    last_recommendation: Optional[dict] = None
+    predictions: List["Prediction"] = field(default_factory=list)
+    finalized: bool = False                   # has emitted a final prediction
+    t_first_submit: Optional[float] = None    # time_fn clock
+    t_first_prediction: Optional[float] = None
+    t_final_prediction: Optional[float] = None
+    t_last_activity: Optional[float] = None   # last submit or emission
+    # ---- tiered placement (simulated episode clock)
+    ready_at: float = 0.0                     # per-session in-order processing
+    records: List["TieredRecord"] = field(default_factory=list)
+    t_first_arrival: Optional[float] = None   # survives record trimming
+    t_first_emit: Optional[float] = None
+    t_final_emit: Optional[float] = None
+
+
+@dataclass
+class TierHost:
+    """One hardware tier with its own busy-until simulated clock."""
+    name: str                   # display name ('glass' | 'edge')
+    tier: str                   # key into ProfileTable.factors
+    profile: ProfileTable
+    free_at: float = 0.0
+    busy_s: float = 0.0
+    calls: int = 0
+
+    def time(self, submodule: str) -> float:
+        return self.profile.time(submodule, self.tier)
+
+    def occupy(self, duration: float, t_start: float) -> Tuple[float, float]:
+        """Book ``duration`` seconds of compute no earlier than
+        ``t_start``; returns (start, done) on the simulated clock."""
+        start = max(t_start, self.free_at)
+        done = start + duration
+        self.free_at = done
+        self.busy_s += duration
+        self.calls += 1
+        return start, done
+
+
+@dataclass
+class TieredRecord:
+    """Timeline of one arrival through tiered placement."""
+    sid: str
+    index: int
+    modality: str
+    model: Optional[str]
+    tier: str                   # where the work actually ran
+    kind: str                   # 'partial' | 'final'
+    t_arrival: float
+    t_start: float              # when the glasses picked the event up
+    t_emit: float               # when the prediction reached the glasses
+    uplink_s: float = 0.0       # payload + cache-sync transfer time
+    downlink_s: float = 0.0     # feature + outputs return transfer time
+    compute_s: float = 0.0
+    fallback: bool = False      # edge crashed mid-flight; re-ran on glass
+    detect_s: float = 0.0       # stall waiting on missed-heartbeat detection
+    decision: Optional[Decision] = None
+    outputs: Optional[dict] = None
+    # stream x tiered composition: the on-glass provisional prediction
+    # emitted from cached features while this offload was in flight
+    glass_partial: Optional[Prediction] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_emit - self.t_arrival
+
+
+# ======================================================================
+# Composable policies
+# ======================================================================
+
+_AUTO = "auto"      # BatchPolicy.bucketer sentinel: derive from the models
+
+
+@dataclass
+class BatchPolicy:
+    """Cross-session coalescing knobs.
+
+    ``bucketer="auto"`` derives per-modality length caps from the
+    models' declared ``max_lengths`` (so padding never exceeds e.g. a
+    positional table); pass an explicit :class:`Bucketer` to control the
+    grid, or ``None`` to disable shape bucketing (tiered default).
+    ``batch_bucket_min`` floors the coalesced batch axis so a steady
+    session count compiles ONE batch shape."""
+    bucketer: Union[Bucketer, None, str] = _AUTO
+    max_coalesce: int = 64
+    batch_bucket_min: int = 1
+
+
+@dataclass
+class StreamPolicy:
+    """Progressive-prediction and liveness knobs.
+
+    ``deadline_s``: 0 flushes on every submit, > 0 buffers arrivals until
+    the oldest pending one is that old, None leaves flushing entirely to
+    the caller. ``idle_timeout_s``/``max_sessions`` drive cross-incident
+    eviction — swept after every flush and ``poll()`` (wall clock), or
+    after every arrival under tiered placement (simulated clock, where
+    the wall-clock ``poll()`` must not sweep). ``glass_partials``
+    (tiered composition only): emit an on-glass provisional partial
+    from cached features while an offloaded arrival is in flight."""
+    deadline_s: Optional[float] = 0.0
+    idle_timeout_s: Optional[float] = None
+    max_sessions: Optional[int] = None
+    glass_partials: bool = True
+
+
+@dataclass
+class PlacementPolicy:
+    """Glass<->edge tier placement knobs. ``profile`` is the one-time
+    offline profiling result; ``trace`` drives both the heartbeat
+    monitor (decisions) and the transport links (true wire bandwidth).
+    ``force='glass'|'edge'`` pins placement for ablations;
+    ``adaptive=False`` always offloads."""
+    profile: ProfileTable
+    trace: BandwidthTrace
+    glass_tier: str = "glass"
+    edge_tier: str = "edge4c"
+    hb_period: float = 1.0
+    link_latency_s: float = 0.005
+    adaptive: bool = True
+    force: Optional[str] = None
+
+
+@dataclass
+class EngineSpec:
+    """A fully-typed engine recipe: which policies are on, plus the
+    engine-wide options. Produced from strings/dicts by
+    :func:`parse_spec`; consumed by :func:`build_engine`."""
+    batch: Optional[BatchPolicy] = None
+    stream: Optional[StreamPolicy] = None
+    placement: Optional[PlacementPolicy] = None
+    share_encoders: bool = False
+    max_history: Optional[int] = 256
+
+    def enabled(self) -> Tuple[str, ...]:
+        out = []
+        if self.batch is not None:
+            out.append("batch")
+        if self.stream is not None:
+            out.append("stream")
+        if self.placement is not None:
+            out.append("tiered")
+        return tuple(out)
+
+
+# ======================================================================
+# The unified engine
+# ======================================================================
+
+class EMSServeEngine:
+    """The one multi-session serving runtime over a ``SplitModel`` zoo.
+
+    ``models``/``params`` are shared across sessions (one weight copy).
+    Behavior composes from the policy objects — see the module docstring
+    for the composition semantics. All public surface of the three
+    legacy engines is preserved: ``submit``/``flush``/``poll``/``drain``
+    /``run_episodes``/``run_arrivals``, the stats accessors, and the
+    per-session views under ``sessions``.
+
+    ``share_encoders=True`` is for zoos built by ``core.modular
+    .emsnet_zoo`` whose subset models share one parameter pytree: a
+    feature is encoded once *total* (cache keys are session-level)
+    instead of once per consuming model (``"{sid}:{model}"`` keys, the
+    per-event engine's discipline). ``time_fn`` is injectable so tests
+    drive a fake wall clock; tiered placement runs on the simulated
+    episode clock instead.
+    """
+
+    def __init__(self, models: Dict[str, SplitModel],
+                 params: Dict[str, dict], *,
+                 batch: Optional[BatchPolicy] = None,
+                 stream: Optional[StreamPolicy] = None,
+                 placement: Optional[PlacementPolicy] = None,
+                 share_encoders: bool = False,
+                 max_history: Optional[int] = 256,
+                 time_fn: Callable[[], float] = time.perf_counter):
+        self.models = models
+        self.params = params
+        self.batch_policy = batch or BatchPolicy()
+        self.stream_policy = stream
+        self.placement_policy = placement
+        self.share_encoders = share_encoders
+        self.max_history = max_history
+        self.time_fn = time_fn
+
+        # ---- batch policy -> coalescing state
+        bucketer = self.batch_policy.bucketer
+        if bucketer == _AUTO:
+            # default grid only for flush-mode engines; tiered placement
+            # historically runs unbucketed unless explicitly configured
+            bucketer = (self._derive_bucketer(models)
+                        if placement is None else None)
+        self.bucketer: Optional[Bucketer] = bucketer
+        self.max_coalesce = self.batch_policy.max_coalesce
+        self.batch_bucket_min = self.batch_policy.batch_bucket_min
+
+        # ---- stream policy -> deadline / eviction state
+        sp = stream
+        self.deadline_s = sp.deadline_s if sp is not None else None
+        self.idle_timeout_s = sp.idle_timeout_s if sp is not None else None
+        self.max_sessions = sp.max_sessions if sp is not None else None
+        self.glass_partials = bool(sp is not None and sp.glass_partials
+                                   and placement is not None)
+
+        # ---- shared session/cache state
+        self.cache = FeatureCache(max_staleness=1)
+        self.sessions: Dict[str, SessionView] = {}
+        # every modality ANY model consumes: a prediction fusing all of
+        # them cannot be refined further -> tagged "final"
+        self.full_set = frozenset(m for sm in models.values()
+                                  for m in sm.modalities())
+        self.evicted_count = 0
+        self._pending: List[Tuple[str, int, float]] = []  # (sid, idx, t_submit)
+        self.flushes: List[FlushReport] = []              # bounded window
+        self.events_total = 0
+        self.flushes_total = 0
+        self._enc_calls_total = 0
+        self._tail_calls_total = 0
+
+        # ---- placement policy -> tier hosts, transport, fault state
+        self.records: List[TieredRecord] = []
+        if placement is not None:
+            pp = placement
+            self.profile = pp.profile
+            self.monitor = HeartbeatMonitor(pp.trace, period=pp.hb_period)
+            self.policy = AdaptiveOffloadPolicy(
+                pp.profile, self.monitor, glass_tier=pp.glass_tier,
+                edge_tier=pp.edge_tier, adaptive=pp.adaptive, force=pp.force)
+            self.glass = TierHost("glass", pp.glass_tier, pp.profile)
+            self.edge = TierHost("edge", pp.edge_tier, pp.profile)
+            self.uplink = TransportChannel(pp.trace,
+                                           latency_s=pp.link_latency_s,
+                                           name="glass->edge")
+            self.downlink = TransportChannel(pp.trace,
+                                             latency_s=pp.link_latency_s,
+                                             name="edge->glass")
+            # edge replica freshness: (cache key, modality) -> feature
+            # VERSION the edge holds (versions only bump on real
+            # re-encodes; steps get re-stamped by every touch, which
+            # would force spurious re-ships)
+            self._edge_versions: Dict[Tuple[str, str], int] = {}
+            # fault injection / detection
+            self.crash_at: Optional[float] = None
+            self.detect_at: Optional[float] = None
+            self.edge_known_dead = False
+            self.fallback_count = 0
+            self.offloaded_count = 0
+            self.on_glass_count = 0
+            self._total_latency = 0.0
+
+    # ------------------------------------------------------------ setup
+
+    @staticmethod
+    def _derive_bucketer(models: Dict[str, SplitModel]) -> Bucketer:
+        """Hard caps from the models (e.g. the text positional table) so
+        the default grid never pads past what they accept."""
+        limits: Dict[str, int] = {}
+        for sm in models.values():
+            for m, n in sm.module.max_lengths.items():
+                limits[m] = min(limits.get(m, n), n)
+        return Bucketer(max_buckets=limits)
+
+    @property
+    def tiered(self) -> bool:
+        return self.placement_policy is not None
+
+    # ------------------------------------------------------------ intake
+
+    def session(self, sid: str) -> SessionView:
+        st = self.sessions.get(sid)
+        if st is None:
+            st = self.sessions[sid] = SessionView(sid)
+        return st
+
+    def ingest(self, arrival: Arrival, *, aggregate=None):
+        """Canonical-typed intake: unpacks an :class:`Arrival`."""
+        return self.submit(arrival.sid, arrival.event, arrival.payload,
+                           aggregate=aggregate)
+
+    def submit(self, sid: str, event: Event, payload, *, aggregate=None):
+        """Record one arriving datum. ``aggregate(old, new) -> input``
+        merges it into the modality's aggregated input (default:
+        replace).
+
+        Flush-mode (no placement): buffers the arrival and flushes if
+        the deadline policy says so — returns the :class:`FlushReport`
+        when one ran, else None. Tiered placement: processes the arrival
+        end to end on the decided tier and returns its
+        :class:`TieredRecord`."""
+        if self.tiered:
+            return self._submit_tiered(sid, event, payload,
+                                       aggregate=aggregate)
+        now = self.time_fn()
+        st = self._intake(sid, event, payload, aggregate)
+        st.t_last_activity = now
+        if st.t_first_submit is None:
+            st.t_first_submit = now
+        self._pending.append((sid, event.index, now))
+        if self.deadline_s is None:
+            return None
+        if self.deadline_s <= 0.0:
+            return self.flush()
+        if now - self._pending[0][2] >= self.deadline_s:
+            return self.flush()
+        return None
+
+    def _intake(self, sid: str, event: Event, payload,
+                aggregate) -> SessionView:
+        """Shared input-aggregation bookkeeping for both modes."""
+        st = self.session(sid)
+        st.step += 1
+        m = event.modality
+        old = st.inputs.get(m)
+        st.inputs[m] = aggregate(old, payload) if aggregate else payload
+        st.input_step[m] = st.step
+        st.dirty.add(m)
+        st.events_seen += 1
+        self.events_total += 1
+        return st
+
+    def poll(self, now: Optional[float] = None) -> Optional[FlushReport]:
+        """Flush if the oldest pending arrival has exceeded the
+        deadline; also the idle hook where session eviction runs. No-op
+        under tiered placement (nothing buffers there)."""
+        if self.tiered:
+            return None
+        now = self.time_fn() if now is None else now
+        if self._pending and self.deadline_s is not None \
+                and now - self._pending[0][2] >= self.deadline_s:
+            return self.flush()
+        self.evict_sessions(now)
+        return None
+
+    def drain(self) -> Optional[FlushReport]:
+        """Flush whatever is pending, deadline or not."""
+        if self.tiered:
+            return None
+        return self.flush() if self._pending else None
+
+    def pending_count(self) -> int:
+        """Arrivals buffered but not yet flushed (the event-loop driver
+        pumps poll() until this reaches zero)."""
+        return len(self._pending)
+
+    # ------------------------------------------------------------- flush
+
+    def _cache_key(self, sid: str, model_name: str) -> str:
+        return sid if self.share_encoders else f"{sid}:{model_name}"
+
+    def _bucket_rows(self, n: int) -> int:
+        return max(self.batch_bucket_min, next_pow2(n))
+
+    def _consumers(self, m: str):
+        return [(n, sm) for n, sm in self.models.items()
+                if m in sm.modalities()]
+
+    def _bucketed(self, m: str, x):
+        return self.bucketer.fit(m, x) if self.bucketer else x
+
+    def _encode_groups(self, sids):
+        """Dirty (session, modality) work grouped by identical
+        post-bucket shape: each group is one stacked encoder call."""
+        groups = defaultdict(list)     # (modality, shape) -> [(sid, payload)]
+        for sid in sids:
+            st = self.sessions[sid]
+            for m in sorted(st.dirty):
+                p = self._bucketed(m, st.inputs[m])
+                shape = (tuple(p["x"].shape) if isinstance(p, dict)
+                         else tuple(p.shape))
+                groups[(m, shape)].append((st.sid, p))
+        return groups
+
+    def flush(self) -> FlushReport:
+        """Run all pending work: one batched encoder call per
+        (modality, bucket[, chunk]) per consuming model (ONE total with
+        ``share_encoders``), scatter rows into the feature cache, one
+        batched tail per selected model, emit progressive predictions,
+        sync the host ONCE."""
+        if self.tiered:
+            raise RuntimeError(
+                "flush() is a flush-mode operation; tiered placement "
+                "processes each arrival in submit()")
+        t0 = self.time_fn()
+        n_enc = n_tail = 0
+        sync_targets = []
+        # every dirty marking comes with a _pending entry, so only the
+        # pending sessions can have work — never scan the whole (ever-
+        # growing) session table on the latency-critical path
+        touched = sorted({sid for sid, _, _ in self._pending})
+
+        # ---- batched encode + scatter rows into the feature cache
+        for (m, _shape), items in self._encode_groups(touched).items():
+            consumers = self._consumers(m)
+            if not consumers:
+                continue
+            runners = consumers[:1] if self.share_encoders else consumers
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                sids = [sid for sid, _ in chunk]
+                stacked = stack_bucketed([p for _, p in chunk],
+                                         self._bucket_rows(len(chunk)))
+                for name, sm in runners:
+                    feats = sm.encoders[m](self.params[name], stacked)
+                    n_enc += 1
+                    sync_targets.append(feats)
+                    for i, sid in enumerate(sids):
+                        st = self.sessions[sid]
+                        self.cache.put(self._cache_key(sid, name), m,
+                                       feats[i:i + 1], step=st.step,
+                                       tier="glass")
+
+        # ---- progressive re-fusion: batched tails per selected model
+        tail_groups = defaultdict(list)    # model name -> [(sid, feats)]
+        for sid in touched:
+            st = self.sessions[sid]
+            if not st.dirty:
+                continue
+            st.dirty.clear()
+            name = select_model(self.models, st.inputs)
+            if name is None:
+                continue
+            sm = self.models[name]
+            feats = self.cache.features(self._cache_key(st.sid, name),
+                                        sm.modalities(),
+                                        input_steps=st.input_step)
+            if feats is not None:
+                tail_groups[name].append((st.sid, feats))
+
+        emitted = []      # (sid, name, modalities, outputs, step)
+        for name, items in tail_groups.items():
+            sm = self.models[name]
+            mods = sm.modalities()
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                sids = [sid for sid, _ in chunk]
+                stacked = {mm: stack_bucketed([f[mm] for _, f in chunk],
+                                              self._bucket_rows(len(chunk)))
+                           for mm in mods}
+                outs = sm.tail(self.params[name], stacked)
+                n_tail += 1
+                sync_targets.append(outs)
+                for i, sid in enumerate(sids):
+                    st = self.sessions[sid]
+                    row = jax.tree.map(lambda a: a[i:i + 1], outs)
+                    emitted.append((sid, name, tuple(mods), row, st.step))
+                    for mm in mods:   # the result carries the cache back
+                        self.cache.touch(self._cache_key(sid, name), mm,
+                                         st.step)
+
+        # ---- the ONE host sync of this flush
+        jax.block_until_ready(sync_targets)
+        t1 = self.time_fn()
+
+        flush_id = self.flushes_total
+        predictions, recommendations = [], {}
+        for sid, name, mods, row, step in emitted:
+            kind = "final" if frozenset(mods) == self.full_set else "partial"
+            pred = Prediction(sid=sid, step=step, model=name,
+                              modalities=mods, kind=kind, outputs=row,
+                              flush_id=flush_id, t_emit=t1)
+            st = self.sessions[sid]
+            self._record_prediction(st, pred)
+            predictions.append(pred)
+            recommendations[sid] = row
+
+        latencies = {(sid, idx): t1 - ts for sid, idx, ts in self._pending}
+        report = FlushReport(
+            flush_id=flush_id, n_events=len(self._pending),
+            n_encoder_calls=n_enc, n_tail_calls=n_tail, wall_s=t1 - t0,
+            latencies=latencies, predictions=predictions,
+            recommendations=recommendations)
+        self._pending.clear()
+        self.flushes.append(report)
+        if self.max_history is not None:
+            del self.flushes[:-self.max_history]
+        self.flushes_total += 1
+        self._enc_calls_total += n_enc
+        self._tail_calls_total += n_tail
+        self.evict_sessions(t1)
+        return report
+
+    def _record_prediction(self, st: SessionView, pred: Prediction):
+        """Session-side bookkeeping shared by flush- and tiered-mode
+        emissions."""
+        st.predictions.append(pred)
+        if self.max_history is not None:
+            del st.predictions[:-self.max_history]
+        st.last_recommendation = pred.outputs
+        st.t_last_activity = pred.t_emit if self.tiered else self.time_fn()
+        if pred.kind == "final":
+            st.finalized = True
+            if st.t_final_prediction is None:
+                st.t_final_prediction = pred.t_emit
+        if st.t_first_prediction is None:
+            st.t_first_prediction = pred.t_emit
+
+    # ---------------------------------------------------------- eviction
+
+    def _evict(self, sid: str):
+        keys = ([sid] if self.share_encoders
+                else [f"{sid}:{n}" for n in self.models])
+        for key in keys:
+            self.cache.drop_session(key)
+        if self.tiered:
+            # forget the edge replica's versions too: a re-created
+            # session restarts its version counters at 0, and a stale
+            # high-water mark would wrongly skip re-shipping features
+            dropped = set(keys)
+            self._edge_versions = {k: v for k, v in
+                                   self._edge_versions.items()
+                                   if k[0] not in dropped}
+        del self.sessions[sid]
+        self.evicted_count += 1
+
+    def evict_sessions(self, now: Optional[float] = None) -> int:
+        """Cross-incident eviction sweep; returns how many sessions
+        left. A session is evictable only when it has no pending
+        arrivals and no un-flushed dirty modalities — eviction never
+        drops work. Idle timeout first, then LRU down to
+        ``max_sessions``: least-recently-active leaves first, so a
+        finalized incident that is still streaming updates outlives an
+        abandoned partial one (finalized only breaks activity ties)."""
+        if self.idle_timeout_s is None and self.max_sessions is None:
+            return 0
+        now = self.time_fn() if now is None else now
+        pending_sids = {sid for sid, _, _ in self._pending}
+        evictable = [st for sid, st in self.sessions.items()
+                     if sid not in pending_sids and not st.dirty]
+        n0 = self.evicted_count
+        if self.idle_timeout_s is not None:
+            for st in list(evictable):
+                last = (st.t_last_activity if st.t_last_activity is not None
+                        else st.t_first_submit)
+                if last is not None and now - last >= self.idle_timeout_s:
+                    self._evict(st.sid)
+                    evictable.remove(st)
+        if self.max_sessions is not None \
+                and len(self.sessions) > self.max_sessions:
+            evictable.sort(key=lambda st: (st.t_last_activity or 0.0,
+                                           not st.finalized))
+            excess = len(self.sessions) - self.max_sessions
+            for st in evictable[:excess]:
+                self._evict(st.sid)
+        return self.evicted_count - n0
+
+    # ==================================================================
+    # Tiered placement path (per-arrival on the simulated tier clocks)
+    # ==================================================================
+
+    def inject_edge_crash(self, t: float):
+        """The edge box dies at simulated time ``t``. The glasses learn
+        of it at the first missed heartbeat strictly after ``t``."""
+        self.crash_at = t
+        period = self.monitor.period
+        self.detect_at = (math.floor(t / period) + 1) * period
+
+    def _mark_edge_dead(self):
+        self.edge_known_dead = True
+        self.policy.force = "glass"       # all future decisions: on-glass
+        self._edge_versions.clear()       # the edge replica is gone
+
+    def _edge_usable(self, now: float) -> bool:
+        if self.edge_known_dead:
+            return False
+        if self.detect_at is not None and now >= self.detect_at:
+            # a background heartbeat already went unanswered
+            self._mark_edge_dead()
+            return False
+        return True
+
+    def _payload_bytes(self, m: str, payload) -> int:
+        """Raw sensor bytes for the uplink: the module's declared size
+        (audio clip / camera frame, not the tokenized tensor) when
+        available, else the actual array bytes."""
+        for _n, sm in self._consumers(m):
+            b = sm.module.payload_bytes.get(m)
+            if b:
+                return b
+        return payload_nbytes(payload)
+
+    def _enc_duration(self, m: str, n_runners: int, host: TierHost) -> float:
+        """Simulated seconds the tier spends encoding modality ``m`` for
+        ``n_runners`` consuming models: expensive text encoders run in
+        parallel, cheap ones serially (paper Fig. 8-right — matching
+        ``core.engine.EMSServe``)."""
+        per = host.time(f"enc:{m}")
+        return per if m == "text" else per * n_runners
+
+    # ----------------------------------------------------- real numerics
+    #
+    # The numerics are split into run / commit phases so the edge fault
+    # path can execute the real jitted calls (placement never changes
+    # the math) yet leave the glass-side cache untouched when the edge
+    # dies before its result makes it back.
+
+    def _run_encoders(self, st: SessionView, m: str) -> Dict[str, object]:
+        """Real jitted encoder run(s) for the arriving modality; returns
+        ``{model_name: feature}`` WITHOUT touching the cache."""
+        consumers = self._consumers(m)
+        if not consumers:
+            return {}
+        runners = consumers[:1] if self.share_encoders else consumers
+        enc_in = self._bucketed(m, st.inputs[m])
+        return {name: sm.encoders[m](self.params[name], enc_in)
+                for name, sm in runners}
+
+    def _commit_features(self, st: SessionView, m: str, feats, tier: str):
+        for name, feat in feats.items():
+            self.cache.put(self._cache_key(st.sid, name), m, feat,
+                           step=st.step, tier=tier)
+
+    def _gather(self, st: SessionView, model_name: str, m: str, feats):
+        """The selected model's input features — the arriving modality
+        from the fresh (possibly uncommitted) ``feats``, everything else
+        from the glass cache with the <=1-step staleness invariant
+        asserted on every read. None while the subset is incomplete."""
+        sm = self.models[model_name]
+        key = self._cache_key(st.sid, model_name)
+        fresh = (next(iter(feats.values()), None) if self.share_encoders
+                 else feats.get(model_name))
+        out = {}
+        for mm in sm.modalities():
+            if mm == m and fresh is not None:
+                out[mm] = fresh
+                continue
+            e = self.cache.get(key, mm, input_step=st.input_step.get(mm))
+            if e is None:
+                return None
+            out[mm] = e.feature
+        return out
+
+    def _touch_consumed(self, st: SessionView, model_name: str):
+        """The result carries the cache back (paper fault tolerance):
+        re-stamp every consumed entry at this step."""
+        key = self._cache_key(st.sid, model_name)
+        for mm in self.models[model_name].modalities():
+            self.cache.touch(key, mm, st.step)
+
+    # ------------------------------------------------------------- event
+
+    def _submit_tiered(self, sid: str, event: Event, payload, *,
+                       aggregate=None) -> TieredRecord:
+        """Process one arriving datum end to end: decide tier, encode
+        there, transport, re-fuse on glass, emit. With the stream
+        policy's ``glass_partials``, an offloaded arrival also yields an
+        immediate on-glass provisional partial from cached features."""
+        prev_observed = set(self.session(sid).inputs)
+        st = self._intake(sid, event, payload, aggregate)
+        st.dirty.clear()        # per-arrival mode: nothing buffers
+
+        t_a = event.arrival_time
+        if st.t_first_arrival is None:
+            st.t_first_arrival = t_a
+        now = max(t_a, st.ready_at)
+        model_name = select_model(self.models, st.inputs)
+        payload_b = self._payload_bytes(event.modality, st.inputs[event.modality])
+        dec = self.policy.decide(f"enc:{event.modality}", payload_b, now)
+
+        partial = None
+        if dec.tier == "edge" and self._edge_usable(now):
+            if self.glass_partials:
+                partial = self._glass_provisional(st, prev_observed, now)
+            rec = self._edge_event(st, event, model_name, payload_b,
+                                   now, dec)
+        else:
+            rec = self._glass_event(st, event, model_name, now, dec)
+        rec.glass_partial = partial
+
+        st.ready_at = rec.t_emit
+        st.t_last_activity = rec.t_emit        # simulated clock
+        st.records.append(rec)
+        self.records.append(rec)
+        if self.max_history is not None:
+            del st.records[:-self.max_history]
+            del self.records[:-self.max_history]
+        self._total_latency += rec.latency_s
+        if rec.outputs is not None:
+            if st.t_first_emit is None:
+                st.t_first_emit = rec.t_emit
+            if rec.kind == "final" and st.t_final_emit is None:
+                st.t_final_emit = rec.t_emit
+            if self.stream_policy is not None:
+                self._record_prediction(st, Prediction(
+                    sid=st.sid, step=st.step, model=rec.model,
+                    modalities=tuple(self.models[rec.model].modalities()),
+                    kind=rec.kind, outputs=rec.outputs, flush_id=-1,
+                    t_emit=rec.t_emit))
+        # cross-incident eviction on the SIMULATED clock (every activity
+        # timestamp in this mode is a t_emit, so wall-clock poll() must
+        # not sweep here — the per-arrival hook is the only safe one)
+        self.evict_sessions(rec.t_emit)
+        return rec
+
+    def _glass_provisional(self, st: SessionView, prev_observed: set,
+                           now: float) -> Optional[Prediction]:
+        """Stream x tiered composition: while the edge refreshes the
+        arriving modality, the glasses immediately re-fuse what they
+        already hold — every feature read from the cache with the
+        <=1-step staleness invariant asserted (the arriving modality's
+        cached feature is exactly one step behind its input now, the
+        paper's tolerated bound). Tagged ``partial`` always: it never
+        reflects the newest datum. No cache touch — provisional serving
+        must not mask real staleness from later reads."""
+        name = select_model(self.models, prev_observed)
+        if name is None:
+            return None
+        sm = self.models[name]
+        feats = self.cache.features(self._cache_key(st.sid, name),
+                                    sm.modalities(),
+                                    input_steps=st.input_step)
+        if feats is None:
+            return None
+        outputs = sm.tail(self.params[name], feats)
+        _start, done = self.glass.occupy(self.glass.time("tail"), now)
+        pred = Prediction(sid=st.sid, step=st.step, model=name,
+                          modalities=tuple(sm.modalities()), kind="partial",
+                          outputs=outputs, flush_id=-1, t_emit=done)
+        self._record_prediction(st, pred)
+        if st.t_first_emit is None or done < st.t_first_emit:
+            st.t_first_emit = done
+        return pred
+
+    def _kind(self, model_name: Optional[str]) -> str:
+        if model_name is None:
+            return "partial"
+        mods = frozenset(self.models[model_name].modalities())
+        return "final" if mods == self.full_set else "partial"
+
+    def _glass_event(self, st: SessionView, event: Event,
+                     model_name: Optional[str], now: float, dec: Decision,
+                     *, fallback: bool = False,
+                     detect_s: float = 0.0) -> TieredRecord:
+        m = event.modality
+        feats = self._run_encoders(st, m)
+        self._commit_features(st, m, feats, tier="glass")
+        outputs = None
+        if model_name is not None:
+            gathered = self._gather(st, model_name, m, feats)
+            if gathered is not None:
+                outputs = self.models[model_name].tail(
+                    self.params[model_name], gathered)
+                self._touch_consumed(st, model_name)
+        dur = (self._enc_duration(m, len(feats), self.glass)
+               if feats else 0.0)
+        if outputs is not None:
+            dur += self.glass.time("tail")
+        start, done = self.glass.occupy(dur, now)
+        self.on_glass_count += 1
+        if fallback:
+            self.fallback_count += 1
+        return TieredRecord(
+            sid=st.sid, index=event.index, modality=m, model=model_name,
+            tier="glass", kind=self._kind(model_name),
+            t_arrival=event.arrival_time, t_start=start, t_emit=done,
+            compute_s=dur, fallback=fallback, detect_s=detect_s,
+            decision=dec, outputs=outputs)
+
+    def _edge_event(self, st: SessionView, event: Event,
+                    model_name: Optional[str], payload_b: int,
+                    now: float, dec: Decision) -> TieredRecord:
+        m = event.modality
+        # ---- uplink: raw payload + any features the edge replica lacks
+        sync_b, synced = 0, []
+        if model_name is not None:
+            key = self._cache_key(st.sid, model_name)
+            for mm in self.models[model_name].modalities():
+                if mm == m:
+                    continue
+                e = self.cache.peek(key, mm)
+                if e is not None and \
+                        self._edge_versions.get((key, mm), -1) < e.version:
+                    sync_b += payload_nbytes(e.feature)
+                    synced.append(((key, mm), e.version))
+        up = self.uplink.send(payload_b + sync_b, now)
+
+        # ---- real numerics (uncommitted) + simulated edge compute
+        feats = self._run_encoders(st, m)
+        outputs = None
+        if model_name is not None:
+            gathered = self._gather(st, model_name, m, feats)
+            if gathered is not None:
+                outputs = self.models[model_name].tail(
+                    self.params[model_name], gathered)
+        dur = self._enc_duration(m, len(feats), self.edge) if feats else 0.0
+        if outputs is not None:
+            dur += self.edge.time("tail")
+        _start, t_done = self.edge.occupy(dur, up.t_deliver)
+
+        # ---- downlink payload: fresh feature(s) + head outputs + the
+        # piggybacked cache re-stamp (an empty-feature result still
+        # ships a small ack frame)
+        down_b = sum(payload_nbytes(f) for f in feats.values())
+        if outputs is not None:
+            down_b += payload_nbytes(outputs)
+
+        # ---- crash window: the edge must survive through the END of
+        # its downlink transmission, not just its compute — a death
+        # mid-transfer loses the result exactly like one mid-encode
+        if self.crash_at is not None \
+                and self.crash_at < self.downlink.eta(down_b, t_done):
+            t_detect = max(now, self.detect_at)
+            self._mark_edge_dead()
+            return self._glass_event(st, event, model_name, t_detect, dec,
+                                     fallback=True,
+                                     detect_s=max(0.0, t_detect - now))
+
+        # ---- success: commit to the glass cache, ship the bytes
+        self._commit_features(st, m, feats, tier="edge")
+        if outputs is not None:
+            self._touch_consumed(st, model_name)
+        down = self.downlink.send(down_b, t_done)
+        # the edge replica now holds everything it consumed or produced
+        for k, version in synced:
+            self._edge_versions[k] = version
+        for name in feats:
+            key = self._cache_key(st.sid, name)
+            e = self.cache.peek(key, m)
+            if e is not None:
+                self._edge_versions[(key, m)] = e.version
+        self.offloaded_count += 1
+        return TieredRecord(
+            sid=st.sid, index=event.index, modality=m, model=model_name,
+            tier="edge", kind=self._kind(model_name),
+            t_arrival=event.arrival_time, t_start=up.t_send,
+            t_emit=down.t_deliver,
+            uplink_s=up.t_deliver - up.t_send,
+            downlink_s=down.t_deliver - t_done,
+            compute_s=dur, decision=dec, outputs=outputs)
+
+    # --------------------------------------------------------- episodes
+
+    def run_arrivals(self, episodes: Dict[str, List[Event]], payload_fn,
+                     *, aggregate=None, sim_window: Optional[float] = None,
+                     crash_at: Optional[float] = None):
+        """Drive sessions through their episodes in GLOBAL arrival-time
+        order (the field regime: one incident, many responders, one
+        interleaved stream — ``core.episodes.merge_arrivals``).
+        ``payload_fn(sid, event) -> payload``.
+
+        Tiered placement: per-arrival, optionally killing the edge at
+        simulated time ``crash_at``; returns the records. Flush-mode:
+        with ``sim_window=None`` the engine's wall-clock deadline policy
+        applies; with ``sim_window`` set, the deadline rule runs on
+        EPISODE time instead (same semantics, different clock): after
+        each submit, flush iff the oldest pending arrival's episode time
+        is >= ``sim_window`` seconds behind the current one — so
+        ``sim_window=0`` flushes per arrival. A final ``drain`` runs
+        either way; returns the flush reports."""
+        arrivals = merge_arrivals(episodes)
+        if self.tiered:
+            if crash_at is not None:
+                self.inject_edge_crash(crash_at)
+            for _t, sid, ev in arrivals:
+                self.submit(sid, ev, payload_fn(sid, ev),
+                            aggregate=aggregate)
+            return self.records
+        if crash_at is not None:
+            raise ValueError("crash_at requires tiered placement")
+        if sim_window is None:
+            for _t, sid, ev in arrivals:
+                self.submit(sid, ev, payload_fn(sid, ev),
+                            aggregate=aggregate)
+        else:
+            saved, self.deadline_s = self.deadline_s, None
+            try:
+                oldest = None
+                for t, sid, ev in arrivals:
+                    self.submit(sid, ev, payload_fn(sid, ev),
+                                aggregate=aggregate)
+                    oldest = t if oldest is None else oldest
+                    if t - oldest >= sim_window:
+                        self.flush()
+                        oldest = None
+            finally:
+                self.deadline_s = saved
+        self.drain()
+        return self.flushes
+
+    def run_episodes(self, episodes: Dict[str, List[Event]], payload_fn,
+                     *, aggregate=None, events_per_flush: int = 1):
+        """Tick-driven batch serving: at tick t every session submits
+        its t-th event; flush every ``events_per_flush`` ticks.
+        ``payload_fn(sid, event) -> payload``."""
+        if self.tiered:
+            raise RuntimeError("run_episodes is a flush-mode driver; "
+                               "tiered placement uses run_arrivals")
+        horizon = max((len(ev) for ev in episodes.values()), default=0)
+        for t in range(horizon):
+            for sid, evs in episodes.items():
+                if t < len(evs):
+                    self.submit(sid, evs[t], payload_fn(sid, evs[t]),
+                                aggregate=aggregate)
+            if (t + 1) % events_per_flush == 0:
+                self.flush()
+        if self._pending:
+            self.flush()
+        return self.flushes
+
+    # ------------------------------------------------------------- stats
+
+    def compile_count(self) -> int:
+        return sum(sm.compile_count() for sm in self.models.values())
+
+    def encoder_calls_total(self) -> int:
+        return self._enc_calls_total
+
+    def tail_calls_total(self) -> int:
+        return self._tail_calls_total
+
+    def event_latencies(self) -> List[float]:
+        return [lat for f in self.flushes for lat in f.latencies.values()]
+
+    def total_wall_s(self) -> float:
+        return sum(f.wall_s for f in self.flushes)
+
+    def time_to_first_prediction(self, sid: str) -> Optional[float]:
+        """Flush-mode: wall seconds from first submit to first emitted
+        prediction. Tiered: simulated seconds from first arrival to the
+        first emission (a glass provisional counts — it IS the first
+        thing the EMT sees)."""
+        st = self.sessions[sid]
+        if self.tiered:
+            if st.t_first_emit is None or st.t_first_arrival is None:
+                return None
+            return st.t_first_emit - st.t_first_arrival
+        if st.t_first_prediction is None or st.t_first_submit is None:
+            return None
+        return st.t_first_prediction - st.t_first_submit
+
+    def time_to_final_prediction(self, sid: str) -> Optional[float]:
+        st = self.sessions[sid]
+        if self.tiered:
+            if st.t_final_emit is None or st.t_first_arrival is None:
+                return None
+            return st.t_final_emit - st.t_first_arrival
+        if st.t_final_prediction is None or st.t_first_submit is None:
+            return None
+        return st.t_final_prediction - st.t_first_submit
+
+    # ----- tiered stats (meaningful only with placement enabled)
+
+    def total_latency_s(self) -> float:
+        """Cumulative serving latency (sum of per-arrival t_emit -
+        t_arrival) — the Fig. 15 comparison metric."""
+        return self._total_latency
+
+    def makespan_s(self) -> float:
+        return max((r.t_emit for r in self.records), default=0.0)
+
+    def transport_stats(self) -> dict:
+        return {"uplink": self.uplink.stats(),
+                "downlink": self.downlink.stats()}
+
+    def placement_counts(self) -> dict:
+        return {"edge": self.offloaded_count, "glass": self.on_glass_count,
+                "fallbacks": self.fallback_count}
+
+
+# ======================================================================
+# Spec parsing + factory
+# ======================================================================
+
+_SPEC_TOKENS = {
+    "batch": "batch", "batched": "batch",
+    "stream": "stream", "streaming": "stream",
+    "tiered": "tiered", "tier": "tiered", "placement": "tiered",
+}
+
+# canonical sections -> (policy class, EngineSpec field); section names
+# are pre-canonicalized through _SPEC_TOKENS
+_SECTIONS = {
+    "batch": (BatchPolicy, "batch"),
+    "stream": (StreamPolicy, "stream"),
+    "tiered": (PlacementPolicy, "placement"),
+}
+
+
+def parse_spec(spec, **overrides) -> EngineSpec:
+    """Normalize an engine spec into a typed :class:`EngineSpec`.
+
+    ``spec`` may be:
+      * a string of '+'-joined policy tokens: ``"batch"``, ``"stream"``,
+        ``"batch+stream"``, ``"stream+tiered"``, ``"batch+stream+tiered"``
+        (aliases: batched/streaming/tier/placement);
+      * a dict with sections ``batch`` / ``stream`` / ``tiered`` (each
+        True or a kwargs dict) plus engine-wide keys ``share_encoders``
+        and ``max_history``;
+      * an :class:`EngineSpec` (returned as-is, overrides applied to
+        copies of its policies is NOT supported — pass a fresh spec).
+
+    ``overrides`` are routed by name: policy-constructor fields go to
+    their policy (e.g. ``deadline_s`` -> StreamPolicy, ``profile``/
+    ``trace`` -> PlacementPolicy, ``bucketer`` -> BatchPolicy), and
+    ``share_encoders``/``max_history`` to the engine; an override beats
+    the same key in a dict-spec section. Tiered specs REQUIRE
+    ``profile`` and ``trace`` (there is no meaningful default
+    hardware)."""
+    if isinstance(spec, EngineSpec):
+        if overrides:
+            raise ValueError("overrides are not applied to a pre-built "
+                             "EngineSpec; pass tokens or a dict instead")
+        return spec
+
+    sections: Dict[str, dict] = {}
+    engine_kw: Dict[str, Any] = {}
+    if isinstance(spec, str):
+        for tok in filter(None, (t.strip() for t in spec.split("+"))):
+            canon = _SPEC_TOKENS.get(tok.lower())
+            if canon is None:
+                raise ValueError(
+                    f"unknown engine spec token {tok!r}; expected "
+                    f"'+'-joined subset of batch/stream/tiered")
+            sections[canon] = {}
+    elif isinstance(spec, dict):
+        for key, val in spec.items():
+            if key in ("share_encoders", "max_history"):
+                engine_kw[key] = val
+                continue
+            canon = _SPEC_TOKENS.get(str(key).lower())
+            if canon is None:
+                raise ValueError(f"unknown engine spec section {key!r}")
+            if val is False or val is None:
+                continue
+            sections[canon] = {} if val is True else dict(val)
+    else:
+        raise TypeError(f"engine spec must be str, dict, or EngineSpec; "
+                        f"got {type(spec).__name__}")
+
+    if not sections:
+        raise ValueError("empty engine spec: enable at least one of "
+                         "batch/stream/tiered")
+
+    # route the keyword overrides to their policy (or the engine)
+    fields_of = {
+        "batch": set(BatchPolicy.__dataclass_fields__),
+        "stream": set(StreamPolicy.__dataclass_fields__),
+        "tiered": set(PlacementPolicy.__dataclass_fields__),
+    }
+    for k, v in overrides.items():
+        if k in ("share_encoders", "max_history"):
+            engine_kw[k] = v
+            continue
+        owner = next((sec for sec in sections if k in fields_of[sec]), None)
+        if owner is None and k in fields_of["batch"]:
+            # the coalescing machinery exists in every flush-mode engine,
+            # so its knobs (bucketer, batch_bucket_min, ...) are always
+            # addressable — an explicit "batch" token is only needed to
+            # *enable* coalescing semantics in the spec's own vocabulary
+            owner = "batch"
+            sections.setdefault("batch", {})
+        if owner is None:
+            enabled = "+".join(sections) or "(none)"
+            raise ValueError(f"override {k!r} does not match any enabled "
+                             f"policy ({enabled})")
+        sections[owner][k] = v        # overrides WIN over dict-spec values
+
+    policies: Dict[str, Any] = {}
+    for sec, kw in sections.items():
+        cls, target = _SECTIONS[sec]
+        unknown = set(kw) - fields_of[sec]
+        if unknown:
+            raise ValueError(f"unknown {sec} policy option(s): "
+                             f"{sorted(unknown)}")
+        if cls is PlacementPolicy and not {"profile", "trace"} <= set(kw):
+            raise ValueError("tiered placement requires 'profile' "
+                             "(ProfileTable) and 'trace' (BandwidthTrace)")
+        policies[target] = cls(**kw)
+    return EngineSpec(**policies, **engine_kw)
+
+
+def build_engine(models: Dict[str, SplitModel], params: Dict[str, dict],
+                 spec, *, time_fn: Callable[[], float] = time.perf_counter,
+                 **overrides) -> EMSServeEngine:
+    """THE factory: assemble an :class:`EMSServeEngine` from a spec.
+
+    ``build_engine(models, params, "batch")`` is the batched
+    fast path; ``"stream"`` the progressive-prediction runtime;
+    ``"stream+tiered"`` streams partials on-glass while the edge
+    computes finals. See :func:`parse_spec` for the spec grammar and
+    override routing."""
+    es = parse_spec(spec, **overrides)
+    return EMSServeEngine(models, params, batch=es.batch, stream=es.stream,
+                          placement=es.placement,
+                          share_encoders=es.share_encoders,
+                          max_history=es.max_history, time_fn=time_fn)

@@ -1,244 +1,55 @@
-"""BatchedEMSServe: multi-session, shape-bucketed, dispatch-async serving.
+"""BatchedEMSServe: the batch-only construction of the unified engine.
 
-The per-event ``core.engine.EMSServe`` is faithful to the paper's
-single-responder trace: one session, one XLA call per submodule, a
-``block_until_ready`` host sync after every call, and a fresh compile
-whenever the growing vitals stream changes shape. An edge box at a real
-incident serves many responders at once (CognitiveEMS-style), so this
-engine turns the same split models + feature cache into a throughput
-path:
+Everything this runtime used to implement — cross-session coalescing
+into one batched XLA call per (modality, bucketed shape) per consumer,
+power-of-two batch rows, dispatch-async flushes with ONE host sync —
+now lives in :class:`repro.serving.api.EMSServeEngine` behind
+:class:`~repro.serving.api.BatchPolicy`. This module is the thin
+constructor shim that preserves the historical surface
+(``submit``/``flush``/``run_episodes``, ``FlushReport.recommendations``,
+per-model cache keys, unbounded flush history) for existing callers and
+the parity tier; new code should say::
 
-  * **cross-session coalescing** — events from all sessions accumulate
-    between flushes; at flush, all pending encoder work for one
-    (modality, bucketed shape) becomes ONE batched jitted call whose
-    rows are then scattered back into each session's ``FeatureCache``
-    entry (lazy row slices — no copy, no sync);
-  * **shape bucketing** — every variable-length input is padded by the
-    ``core.bucketing.Bucketer`` and the coalesced batch axis is padded
-    to a power of two, so the set of compiled programs is bounded and
-    the compile count plateaus after warmup even as vitals streams grow;
-  * **dispatch-async** — inside a flush nothing blocks; XLA calls are
-    dispatched back to back and the host syncs ONCE on the flush's final
-    outputs. ``real_time`` latency is therefore only meaningful at flush
-    boundaries, which is what ``FlushReport`` records.
+    from repro.serving.api import build_engine
+    eng = build_engine(models, params, "batch")
 
 The cache keys (``"{sid}:{model}"``), staleness invariants, and model
-selection rule are shared with the per-event engine, so a single-session
-BatchedEMSServe flushed once per event produces the same
-recommendations (tested in tests/test_batch_serving.py).
+selection rule are shared with the per-event ``core.engine.EMSServe``,
+so a single-session BatchedEMSServe flushed once per event produces the
+same recommendations (tested in tests/test_batch_serving.py).
 """
 from __future__ import annotations
 
-import time
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
-import jax
+from repro.core.bucketing import Bucketer
+from repro.core.splitter import SplitModel
+from repro.serving.api import (_AUTO, BatchPolicy,  # noqa: F401
+                               EMSServeEngine, FlushReport, SessionView)
 
-from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
-from repro.core.episodes import Event
-from repro.core.feature_cache import FeatureCache
-from repro.core.splitter import SplitModel, select_model
+# historical names, now one canonical session type
+SessionState = SessionView
 
 
-@dataclass
-class SessionState:
-    sid: str
-    inputs: Dict[str, object] = field(default_factory=dict)
-    input_step: Dict[str, int] = field(default_factory=dict)
-    step: int = 0
-    dirty: set = field(default_factory=set)      # modalities changed since flush
-    last_recommendation: Optional[dict] = None
-    events_seen: int = 0
-
-
-@dataclass
-class FlushReport:
-    n_events: int                  # events drained by this flush
-    n_encoder_calls: int           # batched XLA encoder dispatches
-    n_tail_calls: int              # batched tail dispatches
-    wall_s: float                  # dispatch + single sync
-    latencies: Dict[Tuple[str, int], float]      # (sid, event idx) -> seconds
-    recommendations: Dict[str, dict]             # sid -> head outputs
-
-
-class BatchedEMSServe:
+class BatchedEMSServe(EMSServeEngine):
     """Coalescing multi-session engine over the same ``SplitModel`` zoo.
 
     ``models``/``params`` are shared across sessions (one weight copy on
     the edge box). ``max_coalesce`` caps a single batched call's row
     count; bigger pending groups split into chunks of that size.
+    Flushing is entirely caller-driven (``deadline_s=None``): ``submit``
+    never computes, ``flush`` drains everything pending.
     """
 
     def __init__(self, models: Dict[str, SplitModel], params: Dict[str, dict],
                  *, bucketer: Optional[Bucketer] = None,
                  max_coalesce: int = 64, batch_bucket_min: int = 1):
-        self.models = models
-        self.params = params
-        if bucketer is None:
-            # derive hard caps from the models (e.g. the text positional
-            # table) so the default never pads past what they accept
-            limits: Dict[str, int] = {}
-            for sm in models.values():
-                for m, n in sm.module.max_lengths.items():
-                    limits[m] = min(limits.get(m, n), n)
-            bucketer = Bucketer(max_buckets=limits)
-        self.bucketer = bucketer
-        self.max_coalesce = max_coalesce
-        # floor for the coalesced batch axis: padding every group to at
-        # least this many rows trades wasted rows for a single static
-        # batch shape (set to the expected session count for serving)
-        self.batch_bucket_min = batch_bucket_min
-        self.cache = FeatureCache(max_staleness=1)
-        self.sessions: Dict[str, SessionState] = {}
-        self._pending: List[Tuple[str, int, float]] = []  # (sid, idx, t_submit)
-        self.flushes: List[FlushReport] = []
-        self.events_total = 0
-
-    # ------------------------------------------------------------ intake
-
-    def session(self, sid: str) -> SessionState:
-        st = self.sessions.get(sid)
-        if st is None:
-            st = self.sessions[sid] = SessionState(sid)
-        return st
-
-    def submit(self, sid: str, event: Event, payload, *, aggregate=None):
-        """Record one arriving datum; no compute happens until flush().
-        ``aggregate(old, new) -> input`` merges into the modality's
-        aggregated input (default: replace)."""
-        st = self.session(sid)
-        st.step += 1
-        m = event.modality
-        old = st.inputs.get(m)
-        st.inputs[m] = aggregate(old, payload) if aggregate else payload
-        st.input_step[m] = st.step
-        st.dirty.add(m)
-        st.events_seen += 1
-        self.events_total += 1
-        self._pending.append((sid, event.index, time.perf_counter()))
-
-    # ------------------------------------------------------------- flush
-
-    def _bucket_rows(self, n: int) -> int:
-        return max(self.batch_bucket_min, next_pow2(n))
-
-    def _encode_groups(self):
-        """Group dirty (session, modality) work by identical post-bucket
-        shape so each group is one stacked encoder call per consumer."""
-        groups = defaultdict(list)       # (modality, shape_key) -> [(sid, payload)]
-        for st in self.sessions.values():
-            for m in sorted(st.dirty):
-                p = self.bucketer.fit(m, st.inputs[m])
-                shape = (tuple(p["x"].shape) if isinstance(p, dict)
-                         else tuple(p.shape))
-                groups[(m, shape)].append((st.sid, p))
-        return groups
-
-    def flush(self) -> FlushReport:
-        """Run all pending work: one batched encoder call per
-        (modality, bucket[, chunk]) per consuming model, then one batched
-        tail call per selected model, then a single host sync."""
-        t0 = time.perf_counter()
-        n_enc = n_tail = 0
-        sync_targets = []
-
-        # ---- batched encode + scatter rows into the feature cache
-        for (m, _shape), items in self._encode_groups().items():
-            consumers = [(n, sm) for n, sm in self.models.items()
-                         if m in sm.modalities()]
-            if not consumers:
-                continue
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = stack_bucketed([p for _, p in chunk],
-                                         self._bucket_rows(len(chunk)))
-                for name, sm in consumers:
-                    feats = sm.encoders[m](self.params[name], stacked)
-                    n_enc += 1
-                    sync_targets.append(feats)
-                    for i, sid in enumerate(sids):
-                        st = self.sessions[sid]
-                        self.cache.put(f"{sid}:{name}", m, feats[i:i + 1],
-                                       step=st.step, tier="glass")
-
-        # ---- batched tails, grouped by selected model
-        tail_groups = defaultdict(list)  # model name -> [(sid, feats)]
-        for st in self.sessions.values():
-            if not st.dirty:
-                continue
-            st.dirty.clear()
-            name = select_model(self.models, st.inputs)
-            if name is None:
-                continue
-            sm = self.models[name]
-            feats = self.cache.features(f"{st.sid}:{name}", sm.modalities(),
-                                        input_steps=st.input_step)
-            if feats is not None:
-                tail_groups[name].append((st.sid, feats))
-
-        recommendations = {}
-        for name, items in tail_groups.items():
-            sm = self.models[name]
-            mods = sm.modalities()
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = {mm: stack_bucketed([f[mm] for _, f in chunk],
-                                              self._bucket_rows(len(chunk)))
-                           for mm in mods}
-                outs = sm.tail(self.params[name], stacked)
-                n_tail += 1
-                sync_targets.append(outs)
-                for i, sid in enumerate(sids):
-                    st = self.sessions[sid]
-                    rec = jax.tree.map(lambda a: a[i:i + 1], outs)
-                    recommendations[sid] = rec
-                    st.last_recommendation = rec
-                    for mm in mods:
-                        self.cache.touch(f"{sid}:{name}", mm, st.step)
-
-        # ---- the ONE host sync of this flush
-        jax.block_until_ready(sync_targets)
-        t1 = time.perf_counter()
-
-        latencies = {(sid, idx): t1 - ts for sid, idx, ts in self._pending}
-        report = FlushReport(
-            n_events=len(self._pending), n_encoder_calls=n_enc,
-            n_tail_calls=n_tail, wall_s=t1 - t0, latencies=latencies,
-            recommendations=recommendations)
-        self._pending.clear()
-        self.flushes.append(report)
-        return report
-
-    # ------------------------------------------------------------- stats
-
-    def compile_count(self) -> int:
-        return sum(sm.compile_count() for sm in self.models.values())
-
-    def event_latencies(self) -> List[float]:
-        return [lat for f in self.flushes for lat in f.latencies.values()]
-
-    def total_wall_s(self) -> float:
-        return sum(f.wall_s for f in self.flushes)
-
-    # --------------------------------------------------------- episodes
-
-    def run_episodes(self, episodes: Dict[str, List[Event]], payload_fn,
-                     *, aggregate=None, events_per_flush: int = 1):
-        """Drive concurrent sessions tick by tick: at tick t every session
-        submits its t-th event; flush every ``events_per_flush`` ticks.
-        ``payload_fn(sid, event) -> payload``."""
-        horizon = max((len(ev) for ev in episodes.values()), default=0)
-        for t in range(horizon):
-            for sid, evs in episodes.items():
-                if t < len(evs):
-                    self.submit(sid, evs[t], payload_fn(sid, evs[t]),
-                                aggregate=aggregate)
-            if (t + 1) % events_per_flush == 0:
-                self.flush()
-        if self._pending:
-            self.flush()
-        return self.flushes
+        super().__init__(
+            models, params,
+            batch=BatchPolicy(
+                bucketer=bucketer if bucketer is not None else _AUTO,
+                max_coalesce=max_coalesce,
+                batch_bucket_min=batch_bucket_min),
+            stream=None, placement=None,
+            share_encoders=False,       # per-model cache keys, like EMSServe
+            max_history=None)           # benchmarks sum over all flushes

@@ -1,121 +1,49 @@
-"""StreamingEMSServe: progressive predictions over asynchronously
-arriving modalities, across many concurrent sessions.
+"""StreamingEMSServe: the batch+stream construction of the unified
+engine.
 
-The paper's field reality (§EMSServe) is that text, vitals, and scene
-features reach the glasses at different times — yet the EMT needs a
-best-effort recommendation *immediately*, refined as modalities land.
-The per-event ``core.engine.EMSServe`` serves one session synchronously
-and ``serving.batch_engine.BatchedEMSServe`` flushes complete batches;
-neither upgrades a partial-modality prediction in place. This runtime
-does:
+Progressive partial->final predictions over asynchronously arriving
+modalities, deadline-driven coalesced flushes, cached re-fusion with
+zero encoder re-runs, and cross-incident session eviction all live in
+:class:`repro.serving.api.EMSServeEngine` behind
+:class:`~repro.serving.api.BatchPolicy` +
+:class:`~repro.serving.api.StreamPolicy`. This module is the thin
+constructor shim preserving the historical surface; new code should
+say::
 
-  * **out-of-order intake** — per-modality arrivals from any session,
-    in any order; each session tracks which modalities it has observed;
-  * **progressive predictions** — every flush emits, per touched
-    session, the prediction of the best model for its *observed subset*
-    (``core.splitter.select_model``), tagged ``partial`` until the
-    subset covers every modality any model consumes, then ``final``;
-  * **encoders never re-run** — a modality is encoded only when its
-    aggregated input changed since the last flush; re-fusion after a
-    later arrival reads the other modalities straight from the
-    ``core.feature_cache.FeatureCache`` (with ``share_encoders=True``,
-    for zoos built by ``core.modular.emsnet_zoo`` whose subset models
-    share one parameter pytree, a feature is also encoded once *total*,
-    not once per consuming model);
-  * **deadline-driven coalesced flushes** — arrivals buffer until a
-    deadline expires (or ``deadline_s=0``: every submit flushes), then
-    all pending encoder work for one (modality, bucketed shape) becomes
-    ONE batched XLA call through the same shape-bucketed machinery as
-    the batch engine (``core.bucketing``), with a single host sync per
-    flush.
+    from repro.serving.api import build_engine
+    eng = build_engine(models, params, "batch+stream",
+                       share_encoders=True, deadline_s=0.05)
 
-Cache keys are session-level (``sid``) under ``share_encoders=True`` and
-``"{sid}:{model}"`` otherwise — the latter matching the per-event and
-batched engines bit for bit.
+``deadline_s`` controls flush cadence: ``0`` flushes on every submit
+(minimum time-to-first-prediction), ``> 0`` buffers arrivals until the
+oldest pending one is that many wall-seconds old (checked on every
+submit and via ``poll()``), ``None`` leaves flushing entirely to the
+caller. ``idle_timeout_s``/``max_sessions`` drive cross-incident
+eviction; ``time_fn`` is injectable so tests can drive a fake clock.
+Cache keys are session-level (``sid``) under ``share_encoders=True``
+(zoos from ``core.modular.emsnet_zoo`` sharing one parameter pytree:
+a feature is encoded once *total*) and ``"{sid}:{model}"`` otherwise —
+the latter matching the per-event and batched engines bit for bit.
 """
 from __future__ import annotations
 
 import time
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Optional
 
-import jax
+from repro.core.bucketing import Bucketer
+from repro.core.splitter import SplitModel
+from repro.serving.api import (_AUTO, BatchPolicy,  # noqa: F401
+                               EMSServeEngine, FlushReport, Prediction,
+                               SessionView, StreamPolicy)
 
-from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
-from repro.core.episodes import Event, merge_arrivals
-from repro.core.feature_cache import FeatureCache
-from repro.core.splitter import SplitModel, select_model
-
-
-@dataclass
-class Prediction:
-    """One progressive prediction emitted for a session by a flush."""
-    sid: str
-    step: int                       # session step it reflects
-    model: str                      # selected model name
-    modalities: Tuple[str, ...]     # fused subset, canonical order
-    kind: str                       # "partial" | "final"
-    outputs: dict                   # head outputs (batch row for sid)
-    flush_id: int
-    t_emit: float                   # time_fn() after the flush's sync
+# historical names, now the canonical unified types
+StreamFlushReport = FlushReport
+StreamSession = SessionView
 
 
-@dataclass
-class StreamSession:
-    sid: str
-    inputs: Dict[str, object] = field(default_factory=dict)
-    input_step: Dict[str, int] = field(default_factory=dict)
-    step: int = 0
-    dirty: set = field(default_factory=set)   # modalities changed since flush
-    events_seen: int = 0
-    t_first_submit: Optional[float] = None
-    t_first_prediction: Optional[float] = None
-    t_final_prediction: Optional[float] = None
-    t_last_activity: Optional[float] = None   # last submit or emission
-    finalized: bool = False                   # has emitted a final prediction
-    predictions: List[Prediction] = field(default_factory=list)
-
-
-@dataclass
-class StreamFlushReport:
-    flush_id: int
-    n_events: int                  # arrivals drained by this flush
-    n_encoder_calls: int           # batched encoder XLA dispatches
-    n_tail_calls: int              # batched tail XLA dispatches
-    wall_s: float                  # dispatch + the single sync
-    predictions: List[Prediction]
-    latencies: Dict[Tuple[str, int], float]   # (sid, event idx) -> seconds
-
-
-class StreamingEMSServe:
-    """Event-driven multi-session runtime with progressive re-fusion.
-
-    ``deadline_s`` controls flush cadence: ``0`` flushes on every submit
-    (minimum time-to-first-prediction), ``> 0`` buffers arrivals until
-    the oldest pending one is that many wall-seconds old (checked on
-    every submit and via ``poll()``), ``None`` leaves flushing entirely
-    to the caller (useful when the caller batches by simulated time).
-    ``time_fn`` is injectable so tests can drive a fake clock.
-
-    Cross-incident eviction: an edge box at one incident after another
-    accumulates sessions (and their cached device features) forever
-    unless finished incidents leave. With ``idle_timeout_s`` set, a
-    session with no pending work that has been inactive that long is
-    evicted (its ``FeatureCache`` entries dropped with it); with
-    ``max_sessions`` set, the table is further trimmed LRU —
-    finalized sessions first — down to the cap. ``evicted_count``
-    counts lifetime evictions; eviction runs after every flush and on
-    ``poll()``. An evicted session that speaks again simply starts
-    fresh (a new incident for the same responder id).
-
-    The runtime is meant to run indefinitely, so per-flush reports and
-    per-session predictions (which hold device arrays) are retained
-    only up to ``max_history`` each; lifetime totals live in running
-    counters (``events_total``, ``flushes_total``,
-    ``encoder_calls_total()``, ``tail_calls_total()``). Pass
-    ``max_history=None`` to keep everything (tests/benchmarks).
-    """
+class StreamingEMSServe(EMSServeEngine):
+    """Event-driven multi-session runtime with progressive re-fusion —
+    see the module and ``api.EMSServeEngine`` docstrings for semantics."""
 
     def __init__(self, models: Dict[str, SplitModel],
                  params: Dict[str, dict], *,
@@ -127,324 +55,15 @@ class StreamingEMSServe:
                  idle_timeout_s: Optional[float] = None,
                  max_sessions: Optional[int] = None,
                  time_fn: Callable[[], float] = time.perf_counter):
-        self.models = models
-        self.params = params
-        if bucketer is None:
-            limits: Dict[str, int] = {}
-            for sm in models.values():
-                for m, n in sm.module.max_lengths.items():
-                    limits[m] = min(limits.get(m, n), n)
-            bucketer = Bucketer(max_buckets=limits)
-        self.bucketer = bucketer
-        self.deadline_s = deadline_s
-        self.max_coalesce = max_coalesce
-        self.batch_bucket_min = batch_bucket_min
-        self.share_encoders = share_encoders
-        self.time_fn = time_fn
-        self.cache = FeatureCache(max_staleness=1)
-        self.sessions: Dict[str, StreamSession] = {}
-        # every modality ANY model consumes: a prediction fusing all of
-        # them cannot be refined further -> tagged "final"
-        self.full_set = frozenset(m for sm in models.values()
-                                  for m in sm.modalities())
-        self.max_history = max_history
-        self.idle_timeout_s = idle_timeout_s
-        self.max_sessions = max_sessions
-        self.evicted_count = 0
-        self._pending: List[Tuple[str, int, float]] = []  # (sid, idx, t_submit)
-        self.flushes: List[StreamFlushReport] = []        # bounded window
-        self.events_total = 0
-        self.flushes_total = 0
-        self._enc_calls_total = 0
-        self._tail_calls_total = 0
-
-    # ------------------------------------------------------------ intake
-
-    def session(self, sid: str) -> StreamSession:
-        st = self.sessions.get(sid)
-        if st is None:
-            st = self.sessions[sid] = StreamSession(sid)
-        return st
-
-    def submit(self, sid: str, event: Event, payload, *,
-               aggregate=None) -> Optional[StreamFlushReport]:
-        """Record one arriving datum; flush if the deadline policy says
-        so (returns the flush report when one ran, else None)."""
-        now = self.time_fn()
-        st = self.session(sid)
-        st.step += 1
-        m = event.modality
-        old = st.inputs.get(m)
-        st.inputs[m] = aggregate(old, payload) if aggregate else payload
-        st.input_step[m] = st.step
-        st.dirty.add(m)
-        st.events_seen += 1
-        st.t_last_activity = now
-        if st.t_first_submit is None:
-            st.t_first_submit = now
-        self.events_total += 1
-        self._pending.append((sid, event.index, now))
-        if self.deadline_s is None:
-            return None
-        if self.deadline_s <= 0.0:
-            return self.flush()
-        if now - self._pending[0][2] >= self.deadline_s:
-            return self.flush()
-        return None
-
-    def poll(self, now: Optional[float] = None) -> Optional[StreamFlushReport]:
-        """Flush if the oldest pending arrival has exceeded the deadline;
-        also the idle hook where session eviction runs."""
-        now = self.time_fn() if now is None else now
-        if self._pending and self.deadline_s is not None \
-                and now - self._pending[0][2] >= self.deadline_s:
-            return self.flush()
-        self.evict_sessions(now)
-        return None
-
-    def drain(self) -> Optional[StreamFlushReport]:
-        """Flush whatever is pending, deadline or not."""
-        return self.flush() if self._pending else None
-
-    def pending_count(self) -> int:
-        """Arrivals buffered but not yet flushed (the event-loop driver
-        pumps poll() until this reaches zero)."""
-        return len(self._pending)
-
-    # ------------------------------------------------------------- flush
-
-    def _cache_key(self, sid: str, model_name: str) -> str:
-        return sid if self.share_encoders else f"{sid}:{model_name}"
-
-    def _bucket_rows(self, n: int) -> int:
-        return max(self.batch_bucket_min, next_pow2(n))
-
-    def _consumers(self, m: str):
-        return [(n, sm) for n, sm in self.models.items()
-                if m in sm.modalities()]
-
-    def _encode_groups(self, sids):
-        """Dirty (session, modality) work grouped by identical
-        post-bucket shape: each group is one stacked encoder call."""
-        groups = defaultdict(list)     # (modality, shape) -> [(sid, payload)]
-        for sid in sids:
-            st = self.sessions[sid]
-            for m in sorted(st.dirty):
-                p = self.bucketer.fit(m, st.inputs[m])
-                shape = (tuple(p["x"].shape) if isinstance(p, dict)
-                         else tuple(p.shape))
-                groups[(m, shape)].append((st.sid, p))
-        return groups
-
-    def flush(self) -> StreamFlushReport:
-        """Encode everything dirty (batched per (modality, bucket)),
-        re-fuse every touched session from cache, emit progressive
-        predictions, sync the host ONCE."""
-        t0 = self.time_fn()
-        n_enc = n_tail = 0
-        sync_targets = []
-        # every dirty marking comes with a _pending entry, so only the
-        # pending sessions can have work — never scan the whole (ever-
-        # growing) session table on the latency-critical path
-        touched = sorted({sid for sid, _, _ in self._pending})
-
-        # ---- batched encode + scatter rows into the feature cache.
-        # share_encoders: subset zoos share one parameter pytree, so one
-        # encoder call serves every consumer; otherwise one per model
-        # (matching BatchedEMSServe).
-        for (m, _shape), items in self._encode_groups(touched).items():
-            consumers = self._consumers(m)
-            if not consumers:
-                continue
-            runners = consumers[:1] if self.share_encoders else consumers
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = stack_bucketed([p for _, p in chunk],
-                                         self._bucket_rows(len(chunk)))
-                for name, sm in runners:
-                    feats = sm.encoders[m](self.params[name], stacked)
-                    n_enc += 1
-                    sync_targets.append(feats)
-                    for i, sid in enumerate(sids):
-                        st = self.sessions[sid]
-                        self.cache.put(self._cache_key(sid, name), m,
-                                       feats[i:i + 1], step=st.step,
-                                       tier="glass")
-
-        # ---- progressive re-fusion: batched tails per selected model
-        tail_groups = defaultdict(list)    # model name -> [(sid, feats)]
-        for sid in touched:
-            st = self.sessions[sid]
-            if not st.dirty:
-                continue
-            st.dirty.clear()
-            name = select_model(self.models, st.inputs)
-            if name is None:
-                continue
-            sm = self.models[name]
-            feats = self.cache.features(self._cache_key(st.sid, name),
-                                        sm.modalities(),
-                                        input_steps=st.input_step)
-            if feats is not None:
-                tail_groups[name].append((st.sid, feats))
-
-        emitted = []      # (sid, name, modalities, outputs, step)
-        for name, items in tail_groups.items():
-            sm = self.models[name]
-            mods = sm.modalities()
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = {mm: stack_bucketed([f[mm] for _, f in chunk],
-                                              self._bucket_rows(len(chunk)))
-                           for mm in mods}
-                outs = sm.tail(self.params[name], stacked)
-                n_tail += 1
-                sync_targets.append(outs)
-                for i, sid in enumerate(sids):
-                    st = self.sessions[sid]
-                    row = jax.tree.map(lambda a: a[i:i + 1], outs)
-                    emitted.append((sid, name, tuple(mods), row, st.step))
-                    for mm in mods:
-                        self.cache.touch(self._cache_key(sid, name), mm,
-                                         st.step)
-
-        # ---- the ONE host sync of this flush
-        jax.block_until_ready(sync_targets)
-        t1 = self.time_fn()
-
-        flush_id = self.flushes_total
-        predictions = []
-        for sid, name, mods, row, step in emitted:
-            kind = "final" if frozenset(mods) == self.full_set else "partial"
-            pred = Prediction(sid=sid, step=step, model=name,
-                              modalities=mods, kind=kind, outputs=row,
-                              flush_id=flush_id, t_emit=t1)
-            st = self.sessions[sid]
-            st.predictions.append(pred)
-            if self.max_history is not None:
-                del st.predictions[:-self.max_history]
-            predictions.append(pred)
-            st.t_last_activity = t1
-            if kind == "final":
-                st.finalized = True
-                if st.t_final_prediction is None:
-                    st.t_final_prediction = t1
-            if st.t_first_prediction is None:
-                st.t_first_prediction = t1
-
-        latencies = {(sid, idx): t1 - ts for sid, idx, ts in self._pending}
-        report = StreamFlushReport(
-            flush_id=flush_id, n_events=len(self._pending),
-            n_encoder_calls=n_enc, n_tail_calls=n_tail, wall_s=t1 - t0,
-            predictions=predictions, latencies=latencies)
-        self._pending.clear()
-        self.flushes.append(report)
-        if self.max_history is not None:
-            del self.flushes[:-self.max_history]
-        self.flushes_total += 1
-        self._enc_calls_total += n_enc
-        self._tail_calls_total += n_tail
-        self.evict_sessions(t1)
-        return report
-
-    # ---------------------------------------------------------- eviction
-
-    def _evict(self, sid: str):
-        for key in ([sid] if self.share_encoders
-                    else [f"{sid}:{n}" for n in self.models]):
-            self.cache.drop_session(key)
-        del self.sessions[sid]
-        self.evicted_count += 1
-
-    def evict_sessions(self, now: Optional[float] = None) -> int:
-        """Cross-incident eviction sweep; returns how many sessions
-        left. A session is evictable only when it has no pending
-        arrivals and no un-flushed dirty modalities — eviction never
-        drops work. Idle timeout first, then LRU down to
-        ``max_sessions``: least-recently-active leaves first, so a
-        finalized incident that is still streaming updates outlives an
-        abandoned partial one (finalized only breaks activity ties)."""
-        if self.idle_timeout_s is None and self.max_sessions is None:
-            return 0
-        now = self.time_fn() if now is None else now
-        pending_sids = {sid for sid, _, _ in self._pending}
-        evictable = [st for sid, st in self.sessions.items()
-                     if sid not in pending_sids and not st.dirty]
-        n0 = self.evicted_count
-        if self.idle_timeout_s is not None:
-            for st in list(evictable):
-                last = (st.t_last_activity if st.t_last_activity is not None
-                        else st.t_first_submit)
-                if last is not None and now - last >= self.idle_timeout_s:
-                    self._evict(st.sid)
-                    evictable.remove(st)
-        if self.max_sessions is not None \
-                and len(self.sessions) > self.max_sessions:
-            evictable.sort(key=lambda st: (st.t_last_activity or 0.0,
-                                           not st.finalized))
-            excess = len(self.sessions) - self.max_sessions
-            for st in evictable[:excess]:
-                self._evict(st.sid)
-        return self.evicted_count - n0
-
-    # ------------------------------------------------------------- stats
-
-    def compile_count(self) -> int:
-        return sum(sm.compile_count() for sm in self.models.values())
-
-    def encoder_calls_total(self) -> int:
-        return self._enc_calls_total
-
-    def tail_calls_total(self) -> int:
-        return self._tail_calls_total
-
-    def time_to_first_prediction(self, sid: str) -> Optional[float]:
-        st = self.sessions[sid]
-        if st.t_first_prediction is None or st.t_first_submit is None:
-            return None
-        return st.t_first_prediction - st.t_first_submit
-
-    def time_to_final_prediction(self, sid: str) -> Optional[float]:
-        st = self.sessions[sid]
-        if st.t_final_prediction is None or st.t_first_submit is None:
-            return None
-        return st.t_final_prediction - st.t_first_submit
-
-    # --------------------------------------------------------- episodes
-
-    def run_arrivals(self, episodes: Dict[str, List[Event]], payload_fn,
-                     *, aggregate=None, sim_window: Optional[float] = None):
-        """Drive sessions through their episodes in GLOBAL arrival-time
-        order (the field regime: one incident, many responders, one
-        interleaved stream — ``core.episodes.merge_arrivals``).
-        ``payload_fn(sid, event) -> payload``.
-
-        Flushing: with ``sim_window=None``, the engine's wall-clock
-        deadline policy applies. With ``sim_window`` set, the deadline
-        rule runs on EPISODE time instead (same semantics, different
-        clock): after each submit, flush iff the oldest pending
-        arrival's episode time is >= ``sim_window`` seconds behind the
-        current one — so ``sim_window=0`` flushes per arrival. A final
-        ``drain`` runs either way."""
-        arrivals = merge_arrivals(episodes)
-        if sim_window is None:
-            for _t, sid, ev in arrivals:
-                self.submit(sid, ev, payload_fn(sid, ev),
-                            aggregate=aggregate)
-        else:
-            saved, self.deadline_s = self.deadline_s, None
-            try:
-                oldest = None
-                for t, sid, ev in arrivals:
-                    self.submit(sid, ev, payload_fn(sid, ev),
-                                aggregate=aggregate)
-                    oldest = t if oldest is None else oldest
-                    if t - oldest >= sim_window:
-                        self.flush()
-                        oldest = None
-            finally:
-                self.deadline_s = saved
-        self.drain()
-        return self.flushes
+        super().__init__(
+            models, params,
+            batch=BatchPolicy(
+                bucketer=bucketer if bucketer is not None else _AUTO,
+                max_coalesce=max_coalesce,
+                batch_bucket_min=batch_bucket_min),
+            stream=StreamPolicy(deadline_s=deadline_s,
+                                idle_timeout_s=idle_timeout_s,
+                                max_sessions=max_sessions),
+            placement=None,
+            share_encoders=share_encoders,
+            max_history=max_history, time_fn=time_fn)

@@ -1,123 +1,47 @@
-"""TieredEMSServe: glass<->edge split-serving on simulated-clock tiers.
+"""TieredEMSServe: the tiered-placement construction of the unified
+engine.
 
-The paper's headline serving capability is that the *pieces* of a
-modality-aware split model run on different hardware tiers — the smart
-glasses themselves and an edge box (manpack) — with a live offloading
-decision per submodule (``Δt + t^e < t^g``), feature transport over a
-real link, and fault tolerance when the edge dies mid-incident. The
-per-event ``core.engine.EMSServe`` only *scores* those decisions against
-an offline rule; this runtime actually hosts the pieces:
+Glass<->edge split serving on simulated-clock tiers — live per-arrival
+offload decisions through the heartbeat-quantized monitor, byte-
+accounted in-order feature transport with an edge cache replica synced
+by feature VERSION, and heartbeat-detected edge-crash failover to
+on-glass with the <=1-step cache-staleness invariant asserted on every
+re-fusion — all live in :class:`repro.serving.api.EMSServeEngine`
+behind :class:`~repro.serving.api.PlacementPolicy`. This module is the
+thin constructor shim preserving the historical surface; new code
+should say::
 
-  * **tier hosts** — ``glass`` and ``edge`` are :class:`TierHost`
-    objects with their own busy-until simulated clocks; submodule
-    compute times come from the one-time :class:`ProfileTable`
-    (``core.offload.TIER_FACTORS``, paper Fig. 8/Table 2), so queueing
-    and pipelining across tiers are modeled, not assumed away. The
-    *numerics* always run through the real jitted ``SplitModel`` pieces
-    on this host — placement changes the clock, never the math, which is
-    what makes tiered outputs bit-comparable to the monolithic forward;
-  * **live offload decisions** — every arrival consults the
-    ``AdaptiveOffloadPolicy`` through the heartbeat-quantized
-    ``HeartbeatMonitor``: decisions see the last heartbeat's bandwidth
-    measurement while the transport pays the trace's true value;
-  * **feature transport** — raw modality payloads go up, encoded
-    features + head outputs (and the piggybacked feature cache, the
-    paper's fault-tolerance mechanism) come back down through
-    byte-accounting in-order :class:`~repro.serving.transport.TransportChannel`
-    links; the edge keeps a cache replica so the uplink only re-ships
-    features the edge doesn't already hold;
-  * **edge-crash fault tolerance** — ``inject_edge_crash(t)`` kills the
-    edge at simulated time ``t``. In-flight work is lost; the glasses
-    detect the failure at the first missed heartbeat after the crash,
-    fall back to on-glass execution, and resume from the versioned
-    glass-side ``FeatureCache`` — whose ``max_staleness=1`` invariant is
-    asserted live on every re-fusion (the edge returned the cache with
-    every result, so the glasses are never more than one step behind).
+    from repro.serving.api import build_engine
+    eng = build_engine(models, params, "tiered",
+                       profile=table, trace=trace, share_encoders=True)
 
-``submit`` is per-arrival (the decision is per-event by construction);
-``run_arrivals`` drives many concurrent sessions through the same
-global arrival-order interleaving the streaming engine uses, so async
-modality arrivals flow arrival -> decide tier -> encode there ->
-transport -> cached re-fusion on glass.
+and can compose streaming on top (``"stream+tiered"``): offloaded
+arrivals then also emit an immediate on-glass provisional partial from
+cached features while the edge computes the refreshed prediction —
+the composition the sibling runtimes could never express.
+
+The numerics always run through the real jitted ``SplitModel`` pieces
+on this host — placement changes the clock, never the math, which is
+what makes tiered outputs bit-comparable to the monolithic forward
+(parity tier: tests/test_tiered_runtime.py, every placement incl.
+post-crash).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.core.bucketing import Bucketer
-from repro.core.episodes import Event, merge_arrivals
-from repro.core.feature_cache import FeatureCache
-from repro.core.offload import (AdaptiveOffloadPolicy, BandwidthTrace,
-                                Decision, HeartbeatMonitor, ProfileTable)
-from repro.core.splitter import SplitModel, select_model
-from repro.serving.transport import TransportChannel, payload_nbytes
+from repro.core.offload import BandwidthTrace, ProfileTable
+from repro.core.splitter import SplitModel
+from repro.serving.api import (BatchPolicy, EMSServeEngine,  # noqa: F401
+                               PlacementPolicy, SessionView, TieredRecord,
+                               TierHost)
+
+# historical name, now the canonical unified session type
+TierSession = SessionView
 
 
-@dataclass
-class TierHost:
-    """One hardware tier with its own busy-until simulated clock."""
-    name: str                   # display name ('glass' | 'edge')
-    tier: str                   # key into ProfileTable.factors
-    profile: ProfileTable
-    free_at: float = 0.0
-    busy_s: float = 0.0
-    calls: int = 0
-
-    def time(self, submodule: str) -> float:
-        return self.profile.time(submodule, self.tier)
-
-    def occupy(self, duration: float, t_start: float) -> Tuple[float, float]:
-        """Book ``duration`` seconds of compute no earlier than
-        ``t_start``; returns (start, done) on the simulated clock."""
-        start = max(t_start, self.free_at)
-        done = start + duration
-        self.free_at = done
-        self.busy_s += duration
-        self.calls += 1
-        return start, done
-
-
-@dataclass
-class TieredRecord:
-    """Timeline of one arrival through the tiered runtime."""
-    sid: str
-    index: int
-    modality: str
-    model: Optional[str]
-    tier: str                   # where the work actually ran
-    kind: str                   # 'partial' | 'final'
-    t_arrival: float
-    t_start: float              # when the glasses picked the event up
-    t_emit: float               # when the prediction reached the glasses
-    uplink_s: float = 0.0       # payload + cache-sync transfer time
-    downlink_s: float = 0.0     # feature + outputs return transfer time
-    compute_s: float = 0.0
-    fallback: bool = False      # edge crashed mid-flight; re-ran on glass
-    detect_s: float = 0.0       # stall waiting on missed-heartbeat detection
-    decision: Optional[Decision] = None
-    outputs: Optional[dict] = None
-
-    @property
-    def latency_s(self) -> float:
-        return self.t_emit - self.t_arrival
-
-
-@dataclass
-class TierSession:
-    sid: str
-    inputs: Dict[str, object] = field(default_factory=dict)
-    input_step: Dict[str, int] = field(default_factory=dict)
-    step: int = 0
-    ready_at: float = 0.0       # per-session in-order processing
-    records: List[TieredRecord] = field(default_factory=list)
-    t_first_arrival: Optional[float] = None   # survives record trimming
-    t_first_emit: Optional[float] = None
-    t_final_emit: Optional[float] = None
-
-
-class TieredEMSServe:
+class TieredEMSServe(EMSServeEngine):
     """Split-serving runtime over (glass, edge) simulated-clock tiers.
 
     ``profile`` is the one-time offline profiling result (seconds per
@@ -136,348 +60,14 @@ class TieredEMSServe:
                  share_encoders: bool = False,
                  bucketer: Optional[Bucketer] = None,
                  max_history: Optional[int] = 256):
-        self.models = models
-        self.params = params
-        self.profile = profile
-        self.monitor = HeartbeatMonitor(trace, period=hb_period)
-        self.policy = AdaptiveOffloadPolicy(
-            profile, self.monitor, glass_tier=glass_tier,
-            edge_tier=edge_tier, adaptive=adaptive, force=force)
-        self.glass = TierHost("glass", glass_tier, profile)
-        self.edge = TierHost("edge", edge_tier, profile)
-        self.uplink = TransportChannel(trace, latency_s=link_latency_s,
-                                       name="glass->edge")
-        self.downlink = TransportChannel(trace, latency_s=link_latency_s,
-                                         name="edge->glass")
-        self.share_encoders = share_encoders
-        self.bucketer = bucketer
-        self.cache = FeatureCache(max_staleness=1)   # glass-side replica
-        # edge replica freshness: (cache key, modality) -> feature VERSION
-        # the edge holds (versions only bump on real re-encodes; steps get
-        # re-stamped by every touch, which would force spurious re-ships)
-        self._edge_versions: Dict[Tuple[str, str], int] = {}
-        self.sessions: Dict[str, TierSession] = {}
-        self.full_set = frozenset(m for sm in models.values()
-                                  for m in sm.modalities())
-        self.records: List[TieredRecord] = []
-        self.max_history = max_history
-        # ---- fault injection / detection state
-        self.crash_at: Optional[float] = None
-        self.detect_at: Optional[float] = None
-        self.edge_known_dead = False
-        # ---- lifetime counters
-        self.events_total = 0
-        self.fallback_count = 0
-        self.offloaded_count = 0
-        self.on_glass_count = 0
-        self._total_latency = 0.0
-
-    # ------------------------------------------------------------ faults
-
-    def inject_edge_crash(self, t: float):
-        """The edge box dies at simulated time ``t``. The glasses learn
-        of it at the first missed heartbeat strictly after ``t``."""
-        self.crash_at = t
-        period = self.monitor.period
-        self.detect_at = (math.floor(t / period) + 1) * period
-
-    def _mark_edge_dead(self):
-        self.edge_known_dead = True
-        self.policy.force = "glass"       # all future decisions: on-glass
-        self._edge_versions.clear()       # the edge replica is gone
-
-    def _edge_usable(self, now: float) -> bool:
-        if self.edge_known_dead:
-            return False
-        if self.detect_at is not None and now >= self.detect_at:
-            # a background heartbeat already went unanswered
-            self._mark_edge_dead()
-            return False
-        return True
-
-    # ------------------------------------------------------------ intake
-
-    def session(self, sid: str) -> TierSession:
-        st = self.sessions.get(sid)
-        if st is None:
-            st = self.sessions[sid] = TierSession(sid)
-        return st
-
-    def _cache_key(self, sid: str, model_name: str) -> str:
-        return sid if self.share_encoders else f"{sid}:{model_name}"
-
-    def _consumers(self, m: str):
-        return [(n, sm) for n, sm in self.models.items()
-                if m in sm.modalities()]
-
-    def _payload_bytes(self, m: str, payload) -> int:
-        """Raw sensor bytes for the uplink: the module's declared size
-        (audio clip / camera frame, not the tokenized tensor) when
-        available, else the actual array bytes."""
-        for _n, sm in self._consumers(m):
-            b = sm.module.payload_bytes.get(m)
-            if b:
-                return b
-        return payload_nbytes(payload)
-
-    def _enc_duration(self, m: str, n_runners: int, host: TierHost) -> float:
-        """Simulated seconds the tier spends encoding modality ``m`` for
-        ``n_runners`` consuming models: expensive text encoders run in
-        parallel, cheap ones serially (paper Fig. 8-right — matching
-        ``core.engine.EMSServe``)."""
-        per = host.time(f"enc:{m}")
-        return per if m == "text" else per * n_runners
-
-    # ----------------------------------------------------- real numerics
-    #
-    # The numerics are split into run / commit phases so the edge fault
-    # path can execute the real jitted calls (placement never changes
-    # the math) yet leave the glass-side cache untouched when the edge
-    # dies before its result makes it back.
-
-    def _run_encoders(self, st: TierSession, m: str) -> Dict[str, object]:
-        """Real jitted encoder run(s) for the arriving modality; returns
-        ``{model_name: feature}`` WITHOUT touching the cache."""
-        consumers = self._consumers(m)
-        if not consumers:
-            return {}
-        runners = consumers[:1] if self.share_encoders else consumers
-        enc_in = (self.bucketer.fit(m, st.inputs[m]) if self.bucketer
-                  else st.inputs[m])
-        return {name: sm.encoders[m](self.params[name], enc_in)
-                for name, sm in runners}
-
-    def _commit_features(self, st: TierSession, m: str, feats, tier: str):
-        for name, feat in feats.items():
-            self.cache.put(self._cache_key(st.sid, name), m, feat,
-                           step=st.step, tier=tier)
-
-    def _gather(self, st: TierSession, model_name: str, m: str, feats):
-        """The selected model's input features — the arriving modality
-        from the fresh (possibly uncommitted) ``feats``, everything else
-        from the glass cache with the <=1-step staleness invariant
-        asserted on every read. None while the subset is incomplete."""
-        sm = self.models[model_name]
-        key = self._cache_key(st.sid, model_name)
-        fresh = (next(iter(feats.values()), None) if self.share_encoders
-                 else feats.get(model_name))
-        out = {}
-        for mm in sm.modalities():
-            if mm == m and fresh is not None:
-                out[mm] = fresh
-                continue
-            e = self.cache.get(key, mm, input_step=st.input_step.get(mm))
-            if e is None:
-                return None
-            out[mm] = e.feature
-        return out
-
-    def _touch_consumed(self, st: TierSession, model_name: str):
-        """The result carries the cache back (paper fault tolerance):
-        re-stamp every consumed entry at this step."""
-        key = self._cache_key(st.sid, model_name)
-        for mm in self.models[model_name].modalities():
-            self.cache.touch(key, mm, st.step)
-
-    # ------------------------------------------------------------- event
-
-    def submit(self, sid: str, event: Event, payload, *,
-               aggregate=None) -> TieredRecord:
-        """Process one arriving datum end to end: decide tier, encode
-        there, transport, re-fuse on glass, emit."""
-        st = self.session(sid)
-        st.step += 1
-        m = event.modality
-        old = st.inputs.get(m)
-        st.inputs[m] = aggregate(old, payload) if aggregate else payload
-        st.input_step[m] = st.step
-        self.events_total += 1
-
-        t_a = event.arrival_time
-        if st.t_first_arrival is None:
-            st.t_first_arrival = t_a
-        now = max(t_a, st.ready_at)
-        model_name = select_model(self.models, st.inputs)
-        payload_b = self._payload_bytes(m, st.inputs[m])
-        dec = self.policy.decide(f"enc:{m}", payload_b, now)
-
-        if dec.tier == "edge" and self._edge_usable(now):
-            rec = self._edge_event(st, event, model_name, payload_b,
-                                   now, dec)
-        else:
-            rec = self._glass_event(st, event, model_name, now, dec)
-
-        st.ready_at = rec.t_emit
-        st.records.append(rec)
-        self.records.append(rec)
-        if self.max_history is not None:
-            del st.records[:-self.max_history]
-            del self.records[:-self.max_history]
-        self._total_latency += rec.latency_s
-        if rec.outputs is not None:
-            if st.t_first_emit is None:
-                st.t_first_emit = rec.t_emit
-            if rec.kind == "final" and st.t_final_emit is None:
-                st.t_final_emit = rec.t_emit
-        return rec
-
-    def _kind(self, model_name: Optional[str]) -> str:
-        if model_name is None:
-            return "partial"
-        mods = frozenset(self.models[model_name].modalities())
-        return "final" if mods == self.full_set else "partial"
-
-    def _glass_event(self, st: TierSession, event: Event,
-                     model_name: Optional[str], now: float, dec: Decision,
-                     *, fallback: bool = False,
-                     detect_s: float = 0.0) -> TieredRecord:
-        m = event.modality
-        feats = self._run_encoders(st, m)
-        self._commit_features(st, m, feats, tier="glass")
-        outputs = None
-        if model_name is not None:
-            gathered = self._gather(st, model_name, m, feats)
-            if gathered is not None:
-                outputs = self.models[model_name].tail(
-                    self.params[model_name], gathered)
-                self._touch_consumed(st, model_name)
-        dur = (self._enc_duration(m, len(feats), self.glass)
-               if feats else 0.0)
-        if outputs is not None:
-            dur += self.glass.time("tail")
-        start, done = self.glass.occupy(dur, now)
-        self.on_glass_count += 1
-        if fallback:
-            self.fallback_count += 1
-        return TieredRecord(
-            sid=st.sid, index=event.index, modality=m, model=model_name,
-            tier="glass", kind=self._kind(model_name),
-            t_arrival=event.arrival_time, t_start=start, t_emit=done,
-            compute_s=dur, fallback=fallback, detect_s=detect_s,
-            decision=dec, outputs=outputs)
-
-    def _edge_event(self, st: TierSession, event: Event,
-                    model_name: Optional[str], payload_b: int,
-                    now: float, dec: Decision) -> TieredRecord:
-        m = event.modality
-        # ---- uplink: raw payload + any features the edge replica lacks
-        sync_b, synced = 0, []
-        if model_name is not None:
-            key = self._cache_key(st.sid, model_name)
-            for mm in self.models[model_name].modalities():
-                if mm == m:
-                    continue
-                e = self.cache.peek(key, mm)
-                if e is not None and \
-                        self._edge_versions.get((key, mm), -1) < e.version:
-                    sync_b += payload_nbytes(e.feature)
-                    synced.append(((key, mm), e.version))
-        up = self.uplink.send(payload_b + sync_b, now)
-
-        # ---- real numerics (uncommitted) + simulated edge compute
-        feats = self._run_encoders(st, m)
-        outputs = None
-        if model_name is not None:
-            gathered = self._gather(st, model_name, m, feats)
-            if gathered is not None:
-                outputs = self.models[model_name].tail(
-                    self.params[model_name], gathered)
-        dur = self._enc_duration(m, len(feats), self.edge) if feats else 0.0
-        if outputs is not None:
-            dur += self.edge.time("tail")
-        _start, t_done = self.edge.occupy(dur, up.t_deliver)
-
-        # ---- downlink payload: fresh feature(s) + head outputs + the
-        # piggybacked cache re-stamp (an empty-feature result still
-        # ships a small ack frame)
-        down_b = sum(payload_nbytes(f) for f in feats.values())
-        if outputs is not None:
-            down_b += payload_nbytes(outputs)
-
-        # ---- crash window: the edge must survive through the END of
-        # its downlink transmission, not just its compute — a death
-        # mid-transfer loses the result exactly like one mid-encode
-        if self.crash_at is not None \
-                and self.crash_at < self.downlink.eta(down_b, t_done):
-            t_detect = max(now, self.detect_at)
-            self._mark_edge_dead()
-            return self._glass_event(st, event, model_name, t_detect, dec,
-                                     fallback=True,
-                                     detect_s=max(0.0, t_detect - now))
-
-        # ---- success: commit to the glass cache, ship the bytes
-        self._commit_features(st, m, feats, tier="edge")
-        if outputs is not None:
-            self._touch_consumed(st, model_name)
-        down = self.downlink.send(down_b, t_done)
-        # the edge replica now holds everything it consumed or produced
-        for k, version in synced:
-            self._edge_versions[k] = version
-        for name in feats:
-            key = self._cache_key(st.sid, name)
-            e = self.cache.peek(key, m)
-            if e is not None:
-                self._edge_versions[(key, m)] = e.version
-        self.offloaded_count += 1
-        return TieredRecord(
-            sid=st.sid, index=event.index, modality=m, model=model_name,
-            tier="edge", kind=self._kind(model_name),
-            t_arrival=event.arrival_time, t_start=up.t_send,
-            t_emit=down.t_deliver,
-            uplink_s=up.t_deliver - up.t_send,
-            downlink_s=down.t_deliver - t_done,
-            compute_s=dur, decision=dec, outputs=outputs)
-
-    # --------------------------------------------------------- episodes
-
-    def run_arrivals(self, episodes: Dict[str, List[Event]], payload_fn,
-                     *, aggregate=None,
-                     crash_at: Optional[float] = None):
-        """Drive concurrent sessions through the global arrival-order
-        interleaving (``core.episodes.merge_arrivals``), optionally
-        killing the edge at simulated time ``crash_at``."""
-        if crash_at is not None:
-            self.inject_edge_crash(crash_at)
-        for _t, sid, ev in merge_arrivals(episodes):
-            self.submit(sid, ev, payload_fn(sid, ev), aggregate=aggregate)
-        return self.records
-
-    # -------------------------------------- event-loop driver interface
-
-    def poll(self, now: Optional[float] = None):
-        """Per-event runtime: nothing buffers, so polling is a no-op
-        (present for ``serving.event_loop`` driver compatibility)."""
-        return None
-
-    def drain(self):
-        return None
-
-    def pending_count(self) -> int:
-        return 0
-
-    # ------------------------------------------------------------- stats
-
-    def total_latency_s(self) -> float:
-        """Cumulative serving latency (sum of per-arrival t_emit -
-        t_arrival) — the Fig. 15 comparison metric."""
-        return self._total_latency
-
-    def makespan_s(self) -> float:
-        return max((r.t_emit for r in self.records), default=0.0)
-
-    def compile_count(self) -> int:
-        return sum(sm.compile_count() for sm in self.models.values())
-
-    def time_to_first_prediction(self, sid: str) -> Optional[float]:
-        st = self.sessions[sid]
-        if st.t_first_emit is None or st.t_first_arrival is None:
-            return None
-        return st.t_first_emit - st.t_first_arrival
-
-    def transport_stats(self) -> dict:
-        return {"uplink": self.uplink.stats(),
-                "downlink": self.downlink.stats()}
-
-    def placement_counts(self) -> dict:
-        return {"edge": self.offloaded_count, "glass": self.on_glass_count,
-                "fallbacks": self.fallback_count}
+        super().__init__(
+            models, params,
+            batch=BatchPolicy(bucketer=bucketer),   # None: unbucketed, as ever
+            stream=None,                            # legacy: no glass partials
+            placement=PlacementPolicy(
+                profile=profile, trace=trace, glass_tier=glass_tier,
+                edge_tier=edge_tier, hb_period=hb_period,
+                link_latency_s=link_latency_s, adaptive=adaptive,
+                force=force),
+            share_encoders=share_encoders,
+            max_history=max_history)

@@ -1,0 +1,394 @@
+"""Unified session-engine API: spec parsing, cross-engine parity, and
+policy composition.
+
+Parity tier (ISSUE 4 acceptance): ``build_engine`` with each single
+policy enabled reproduces the corresponding legacy engine's predictions
+event-for-event on the LAG_SCENARIOS async episodes. Composition tier:
+``batch+stream`` coalesces without changing finals, and
+``stream+tiered`` serves on-glass provisional partials (matching
+``partial_forward``) while the edge computes finals (matching
+``SplitModel.full``), with the <=1-step cache-staleness invariant still
+asserted live.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthTrace, Bucketer, LAG_SCENARIOS,
+                        ProfileTable, async_episode, emsnet_module,
+                        emsnet_zoo, merge_arrivals, nlos_bandwidth, split)
+from repro.core.episodes import Event
+from repro.core.feature_cache import StalenessError
+from repro.models import emsnet as E
+from repro.serving.api import (Arrival, BatchPolicy, EngineSpec,
+                               EMSServeEngine, PlacementPolicy,
+                               StreamPolicy, build_engine, parse_spec)
+from repro.serving.batch_engine import BatchedEMSServe
+from repro.serving.stream_engine import StreamingEMSServe
+from repro.serving.tiered_runtime import TieredEMSServe
+
+ALL = ("text", "vitals", "scene")
+
+BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
+        "tail": 0.005, "full": 0.15}
+
+
+def _lag_episodes(n_per_scenario=1, **kw):
+    """One async episode per LAG_SCENARIOS preset (the ISSUE's parity
+    workload): every preset's arrival ordering is exercised."""
+    eps = {}
+    for i, name in enumerate(sorted(LAG_SCENARIOS)):
+        for j in range(n_per_scenario):
+            eps[f"s{i}{j}"] = async_episode(name, seed=i * 7 + j,
+                                            n_vitals=2, n_scene=2, **kw)
+    return eps
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+@pytest.fixture(scope="module")
+def indep_models(tiny_emsnet_cfg):
+    """Independently-parameterized m1/m2/m3 (the batch engine regime)."""
+    cfg = tiny_emsnet_cfg
+    key = jax.random.PRNGKey(0)
+    mods = {
+        "m1": emsnet_module(cfg, ("text",)),
+        "m2": emsnet_module(cfg, ("text", "vitals")),
+        "m3": emsnet_module(cfg, ("text", "vitals", "scene")),
+    }
+    splits = {k: split(m) for k, m in mods.items()}
+    params = {k: m.init_fn(jax.random.fold_in(key, i))
+              for i, (k, m) in enumerate(mods.items())}
+    rng = np.random.default_rng(1)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 9)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, params, payloads
+
+
+def _assert_close(got, want, atol=1e-5):
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], atol=atol)
+
+
+# ======================================================================
+# Spec parsing / factory contract
+# ======================================================================
+
+def test_parse_spec_strings_and_aliases():
+    es = parse_spec("batch+stream")
+    assert es.batch is not None and es.stream is not None
+    assert es.placement is None
+    assert es.enabled() == ("batch", "stream")
+    # aliases normalize
+    es2 = parse_spec("batched+streaming")
+    assert es2.enabled() == ("batch", "stream")
+    # pre-built specs pass through
+    es3 = EngineSpec(stream=StreamPolicy())
+    assert parse_spec(es3) is es3
+
+
+def test_parse_spec_dict_sections_and_overrides():
+    es = parse_spec({"batch": {"max_coalesce": 32}, "stream": True,
+                     "share_encoders": True},
+                    deadline_s=0.25, batch_bucket_min=4)
+    assert es.batch.max_coalesce == 32
+    assert es.batch.batch_bucket_min == 4          # routed override
+    assert es.stream.deadline_s == 0.25
+    assert es.share_encoders is True
+    # batch-machinery knobs are addressable without a batch token (the
+    # coalescing machinery exists in every flush-mode engine)
+    es2 = parse_spec("stream", bucketer=None, batch_bucket_min=2)
+    assert es2.batch is not None and es2.batch.batch_bucket_min == 2
+
+
+def test_parse_spec_rejects_bad_input():
+    with pytest.raises(ValueError):
+        parse_spec("batch+warp")                   # unknown token
+    with pytest.raises(ValueError):
+        parse_spec("")                             # empty
+    with pytest.raises(ValueError):
+        parse_spec("tiered")                       # no profile/trace
+    with pytest.raises(ValueError):
+        parse_spec("batch", deadline_s=1.0)        # stream knob, no stream
+    with pytest.raises(ValueError):
+        parse_spec({"stream": {"warp_factor": 9}})  # unknown option
+    with pytest.raises(TypeError):
+        parse_spec(42)
+
+
+def test_build_engine_wires_policies(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(splits, params, "batch+stream", share_encoders=True,
+                       deadline_s=None, batch_bucket_min=2)
+    assert isinstance(eng, EMSServeEngine) and not eng.tiered
+    assert eng.deadline_s is None and eng.batch_bucket_min == 2
+    assert eng.bucketer is not None                # derived by default
+    tiered = build_engine(splits, params, "tiered", share_encoders=True,
+                          profile=ProfileTable(base=dict(BASE)),
+                          trace=BandwidthTrace.static(nlos_bandwidth(0.0)))
+    assert tiered.tiered and tiered.bucketer is None   # tiered default
+    # Arrival is the canonical intake type
+    rec = tiered.ingest(Arrival("s0", Event(0, "text", 0.0),
+                                payloads["text"]))
+    assert rec.sid == "s0" and rec.outputs is not None
+
+
+# ======================================================================
+# Parity tier: each single policy == its legacy engine, event for event
+# ======================================================================
+
+def test_batch_spec_matches_legacy_batched(indep_models):
+    """build_engine('batch') == BatchedEMSServe on the LAG_SCENARIOS
+    interleaving: same flush cadence, same recommendations, same
+    dispatch counts."""
+    cfg, splits, params, payloads = indep_models
+    eps = _lag_episodes()
+    mk = lambda: Bucketer(max_buckets={"vitals": 8})  # noqa: E731
+
+    def drive(eng):
+        reports = []
+        for _t, sid, ev in merge_arrivals(eps):
+            eng.submit(sid, ev, payloads[ev.modality])
+            reports.append(eng.flush())
+        return reports
+
+    legacy = drive(BatchedEMSServe(splits, params, bucketer=mk()))
+    unified = drive(build_engine(splits, params, "batch", bucketer=mk()))
+    assert len(legacy) == len(unified)
+    for a, b in zip(legacy, unified):
+        assert (a.n_events, a.n_encoder_calls, a.n_tail_calls) == \
+            (b.n_events, b.n_encoder_calls, b.n_tail_calls)
+        assert sorted(a.recommendations) == sorted(b.recommendations)
+        for sid in a.recommendations:
+            _assert_close(b.recommendations[sid], a.recommendations[sid],
+                          atol=0)
+
+
+def test_stream_spec_matches_legacy_streaming(zoo_models):
+    """build_engine('stream') == StreamingEMSServe prediction-for-
+    prediction over the LAG_SCENARIOS interleaving."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = _lag_episodes()
+
+    def drive(eng):
+        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                         sim_window=0.0)
+        return [p for f in eng.flushes for p in f.predictions]
+
+    legacy = drive(StreamingEMSServe(splits, params, share_encoders=True,
+                                     deadline_s=None, max_history=None))
+    unified = drive(build_engine(splits, params, "stream",
+                                 share_encoders=True, deadline_s=None,
+                                 max_history=None))
+    assert len(legacy) == len(unified) > 0
+    for a, b in zip(legacy, unified):
+        assert (a.sid, a.step, a.model, a.modalities, a.kind,
+                a.flush_id) == (b.sid, b.step, b.model, b.modalities,
+                                b.kind, b.flush_id)
+        _assert_close(b.outputs, a.outputs, atol=0)
+    # finals match the one-shot forward (the legacy parity anchor)
+    want = E.forward(shared, cfg, payloads)
+    finals = [p for p in unified if p.kind == "final"]
+    assert finals
+    _assert_close(finals[-1].outputs, want)
+
+
+def test_tiered_spec_matches_legacy_tiered(zoo_models):
+    """build_engine('tiered') == TieredEMSServe record-for-record:
+    placement, clocks, and outputs."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = _lag_episodes()
+    mk = lambda: dict(  # noqa: E731
+        profile=ProfileTable(base=dict(BASE)),
+        trace=BandwidthTrace.static(nlos_bandwidth(5.0)))
+
+    legacy = TieredEMSServe(splits, params, share_encoders=True, **mk())
+    legacy.run_arrivals(eps, lambda sid, ev: payloads[ev.modality])
+    unified = build_engine(splits, params, "tiered", share_encoders=True,
+                           **mk())
+    unified.run_arrivals(eps, lambda sid, ev: payloads[ev.modality])
+
+    assert len(legacy.records) == len(unified.records) > 0
+    for a, b in zip(legacy.records, unified.records):
+        assert (a.sid, a.index, a.modality, a.model, a.tier, a.kind) == \
+            (b.sid, b.index, b.modality, b.model, b.tier, b.kind)
+        assert a.t_start == pytest.approx(b.t_start)
+        assert a.t_emit == pytest.approx(b.t_emit)
+        if a.outputs is not None:
+            _assert_close(b.outputs, a.outputs, atol=0)
+    assert legacy.placement_counts() == unified.placement_counts()
+    # legacy construction = stream policy off: no glass partials anywhere
+    assert all(r.glass_partial is None for r in legacy.records)
+
+
+# ======================================================================
+# Composition tier
+# ======================================================================
+
+def test_batch_stream_composition_coalesces_without_changing_finals(
+        zoo_models):
+    """batch+stream: deadline-coalesced flushes over interleaved
+    sessions batch the work (fewer flushes) yet the finals equal the
+    flush-per-arrival engine's."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eps = _lag_episodes()
+
+    def run(sim_window):
+        eng = build_engine(splits, params, "batch+stream",
+                           share_encoders=True, deadline_s=None,
+                           batch_bucket_min=2, max_history=None)
+        eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                         sim_window=sim_window)
+        return eng
+
+    per_arrival = run(0.0)
+    coalesced = run(2.0)
+    assert coalesced.flushes_total < per_arrival.flushes_total
+    for sid in eps:
+        a = per_arrival.sessions[sid].predictions[-1]
+        b = coalesced.sessions[sid].predictions[-1]
+        assert a.kind == b.kind == "final"
+        _assert_close(b.outputs, a.outputs, atol=0)
+
+
+def test_stream_tiered_composition_glass_partials(zoo_models):
+    """The newly-possible composition: while an offloaded arrival is in
+    flight, the glasses emit a provisional partial from cached
+    (<=1-step stale) features — matching ``partial_forward`` on the
+    previously-observed subset and landing BEFORE the edge's refreshed
+    prediction — and the finals still match ``SplitModel.full``."""
+    cfg, splits, shared, params, payloads = zoo_models
+    # degraded-but-offloadable link (10 m NLOS): raw-payload-heavy
+    # uplinks make the edge round trip slower than the on-glass tail,
+    # which is the regime where provisional partials buy real lead time
+    eng = build_engine(splits, params, "stream+tiered",
+                       share_encoders=True,
+                       profile=ProfileTable(base=dict(BASE)),
+                       trace=BandwidthTrace.static(nlos_bandwidth(10.0)))
+    recs = []
+    for i, m in enumerate(ALL):
+        recs.append(eng.submit("s0", Event(i, m, float(i)), payloads[m]))
+
+    # everything still offloads; the first arrival has no cached subset
+    # yet, later ones serve a glass partial over what was there
+    assert [r.tier for r in recs] == ["edge", "edge", "edge"]
+    assert recs[0].glass_partial is None
+    for i in (1, 2):
+        gp = recs[i].glass_partial
+        assert gp is not None and gp.kind == "partial"
+        assert gp.modalities == ALL[:i]            # the pre-arrival subset
+        _assert_close(gp.outputs,
+                      E.partial_forward(shared, cfg, payloads, ALL[:i]))
+    # the camera-frame offload pays a ~0.4 s uplink: its provisional
+    # partial lands on-glass while the refresh is still in flight
+    assert recs[2].glass_partial.t_emit < recs[2].t_emit
+    # the refreshed predictions are unchanged by the composition
+    for i, r in enumerate(recs):
+        _assert_close(r.outputs,
+                      E.partial_forward(shared, cfg, payloads, ALL[:i + 1]))
+    assert recs[-1].kind == "final"
+    _assert_close(recs[-1].outputs, E.forward(shared, cfg, payloads))
+
+    # a re-arrival serves the FULL fused subset from 1-step-stale cache
+    # (the paper's tolerated bound) while the edge refreshes vitals
+    rec = eng.submit("s0", Event(3, "vitals", 4.0), payloads["vitals"])
+    gp = rec.glass_partial
+    assert gp is not None and gp.modalities == ALL and gp.kind == "partial"
+    _assert_close(gp.outputs, E.forward(shared, cfg, payloads))
+    # sessions expose the full progressive stream under stream policy
+    kinds = [p.kind for p in eng.sessions["s0"].predictions]
+    assert kinds.count("partial") >= 3 and "final" in kinds
+    # TTFP counts the glass provisional (it IS what the EMT sees first)
+    assert eng.time_to_first_prediction("s0") is not None
+
+
+def test_stream_tiered_staleness_invariant_still_asserted(zoo_models):
+    """The glass-partial path reads through the live staleness assert:
+    an artificially outdated cache entry raises StalenessError instead
+    of silently serving stale-beyond-bound features."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(splits, params, "stream+tiered",
+                       share_encoders=True,
+                       profile=ProfileTable(base=dict(BASE)),
+                       trace=BandwidthTrace.static(nlos_bandwidth(0.0)))
+    for i, m in enumerate(ALL):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    # corrupt the vitals entry to be 2+ steps behind its input
+    eng.cache.peek("s0", "vitals").step -= 2
+    with pytest.raises(StalenessError):
+        eng.submit("s0", Event(3, "vitals", 4.0), payloads["vitals"])
+
+
+def test_all_three_policies_compose(zoo_models):
+    """batch+stream+tiered builds one runtime: shape bucketing from the
+    batch policy bounds the tiered encoder shapes, glass partials flow,
+    and parity with the monolithic forward holds."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(
+        splits, params, "batch+stream+tiered", share_encoders=True,
+        bucketer=Bucketer(max_buckets={"vitals": 8,
+                                       "text": cfg.max_text_len}),
+        profile=ProfileTable(base=dict(BASE)),
+        trace=BandwidthTrace.static(nlos_bandwidth(0.0)))
+    assert eng.tiered and eng.bucketer is not None
+    for i, m in enumerate(ALL):
+        rec = eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    assert rec.kind == "final"
+    _assert_close(rec.outputs, E.forward(shared, cfg, payloads))
+    assert any(r.glass_partial is not None
+               for r in eng.sessions["s0"].records)
+
+
+def test_stream_tiered_eviction_runs_on_the_simulated_clock(zoo_models):
+    """Cross-incident eviction composes with tiered placement: over the
+    max_sessions cap, the least-recently-active incident leaves with its
+    cache entries and edge-replica version bookkeeping."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(splits, params, "stream+tiered",
+                       share_encoders=True, max_sessions=1,
+                       profile=ProfileTable(base=dict(BASE)),
+                       trace=BandwidthTrace.static(nlos_bandwidth(0.0)))
+    for i, m in enumerate(ALL):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    assert ("s0", "text") in eng.cache
+    eng.submit("s1", Event(0, "text", 10.0), payloads["text"])
+    assert set(eng.sessions) == {"s1"} and eng.evicted_count == 1
+    assert ("s0", "text") not in eng.cache
+    assert not any(k[0] == "s0" for k in eng._edge_versions)
+
+
+def test_parse_spec_override_beats_dict_section():
+    es = parse_spec({"stream": {"deadline_s": 0.1}}, deadline_s=0.05)
+    assert es.stream.deadline_s == 0.05
+
+
+def test_tiered_flush_mode_guards():
+    """Mode misuse fails loudly, not silently."""
+    with pytest.raises(ValueError):
+        # crash_at only makes sense with placement
+        StreamingEMSServe({}, {}).run_arrivals({}, lambda s, e: None,
+                                               crash_at=1.0)
