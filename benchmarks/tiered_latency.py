@@ -27,6 +27,14 @@ the ``"stream+tiered"`` composition — on-glass provisional partials
 from cached (<=1-step stale) features while each offload is in flight —
 that the pre-unification sibling runtimes could not express.
 
+Beyond the paper's two-tier pair, the N-tier sweeps exercise the
+``tiers=("glass", "ph1", "edge64x")`` placement surface: the phone is a
+near-field tether, the edge box sits behind distance-degraded NLOS
+WiFi, decisions are contention-aware, and each fusion tail gets its own
+placement (possibly a third host). A crash->failover->rejoin sweep
+restarts the edge box mid-incident and checks latency recovers once the
+rejoined tier re-warms its replica and is re-selected.
+
 Acceptance (checked by ``--smoke``):
   * adaptive >= 1.9x over all-on-glass on the paper's close-range
     regimes (static 0/5/10 m and mobility);
@@ -35,7 +43,15 @@ Acceptance (checked by ``--smoke``):
     with a final prediction that matches the monolithic full forward;
   * composition: >= 1 glass partial emitted, partials match
     ``partial_forward`` on their subset, finals still match the
-    monolithic full forward.
+    monolithic full forward;
+  * 3-tier: adaptive strictly beats the best single-remote static
+    placement on >= 1 regime, finals bit-equal to the monolithic
+    forward (atol 0);
+  * rejoin: >= 1 failover and >= 1 rejoin, the outage measurably hurt,
+    post-rejoin mean latency recovers to within 15% of a no-crash run
+    of the same workload (window-for-window — the modality mix differs
+    across windows), the rejoined tier is re-selected, finals stay
+    bit-equal.
 
 -> artifacts/BENCH_tiered.json
 """
@@ -63,6 +79,30 @@ PAPER_REGIMES = ("static_0m", "static_5m", "static_10m", "mobility")
 PAPER_BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
               "tail": 0.005, "full": 0.15}
 
+# N-tier sweep: glasses local, the EMT's phone, and the big edge box
+# (core.offload.TIER_FACTORS keys; first entry is the local host)
+TIERS3 = ("glass", "ph1", "edge64x")
+
+
+def _finals_match_full(eng, eps, want, *, atol=0.0):
+    """Every session's last final prediction vs the monolithic forward.
+    ``atol=0`` pins bit-equality — placement changes the clock, never
+    the math."""
+    for sid in eps:
+        st = eng.sessions[sid]
+        last = next((r for r in reversed(st.records)
+                     if r.kind == "final" and r.outputs is not None), None)
+        if last is None:
+            return False
+        for k in want:
+            got = np.asarray(last.outputs[k])
+            if atol == 0.0:
+                if not np.array_equal(got, np.asarray(want[k])):
+                    return False
+            elif not np.allclose(got, want[k], atol=atol):
+                return False
+    return True
+
 
 def _workload(n_sessions, seed=0, *, n_vitals=4, n_scene=2):
     from repro.core import async_episode
@@ -84,13 +124,13 @@ def _traces(quick):
 
 
 def _run(splits, params, profile_table, trace, eps, payloads, *,
-         force=None, crash_at=None, spec="tiered"):
+         force=None, crash_at=None, rejoin_at=None, spec="tiered", **kw):
     from repro.serving.api import build_engine
     eng = build_engine(splits, params, spec, profile=profile_table,
                        trace=trace, share_encoders=True, force=force,
-                       max_history=None)
+                       max_history=None, **kw)
     eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
-                     crash_at=crash_at)
+                     crash_at=crash_at, rejoin_at=rejoin_at)
     return eng
 
 
@@ -248,6 +288,121 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
               f"partials={len(leads)};lead_pos={len(pos)};"
               f"parity={partials_ok and comp_finals_ok}")
 
+    # ---- N-tier placement (glass / phone / edge box): the phone rides
+    # in the EMT's pocket (near-field tether), the edge box sits by the
+    # manpack behind distance-degraded NLOS WiFi. Adaptive placement
+    # may mix tiers per submodule (contention-aware decisions + tail
+    # placement are the N-tier default); the static ablations pin
+    # everything to one host. Gate: adaptive strictly beats the best
+    # single-remote static on >= 1 regime, finals stay bit-equal to
+    # the monolithic forward.
+    ph_near = BandwidthTrace.static(nlos_bandwidth(0.0))
+    result["tiers3"] = {}
+    for name, edge_d in (("edge_far", 25.0), ("edge_near", 5.0)):
+        edge_tr = BandwidthTrace.static(nlos_bandwidth(edge_d))
+        runs3 = {label: _run(splits, params, table, edge_tr, zoo_eps,
+                             payloads, force=force, tiers=TIERS3,
+                             tier_traces={"ph1": ph_near})
+                 for label, force in (("adaptive", None),
+                                      ("all_glass", "glass"),
+                                      ("all_ph1", "ph1"),
+                                      ("all_edge64x", "edge64x"))}
+        lat3 = {k: e.total_latency_s() for k, e in runs3.items()}
+        best_static = min(lat3["all_ph1"], lat3["all_edge64x"])
+        entry = {k: _summary(e) for k, e in runs3.items()}
+        entry["adaptive_tail_placements"] = \
+            runs3["adaptive"].tail_placement_counts()
+        entry["speedup_adaptive_vs_glass"] = float(lat3["all_glass"]
+                                                   / lat3["adaptive"])
+        entry["speedup_adaptive_vs_best_static_remote"] = float(
+            best_static / lat3["adaptive"])
+        entry["adaptive_beats_best_static"] = bool(lat3["adaptive"]
+                                                   < best_static)
+        entry["finals_match_full_atol0"] = _finals_match_full(
+            runs3["adaptive"], zoo_eps, want)
+        result["tiers3"][name] = entry
+        C.csv_row(f"tiered3_{name}", lat3["adaptive"] * 1e6,
+                  f"ph1={lat3['all_ph1']*1e3:.1f}ms;"
+                  f"edge64x={lat3['all_edge64x']*1e3:.1f}ms;"
+                  f"vs_best_static="
+                  f"{entry['speedup_adaptive_vs_best_static_remote']:.2f}x")
+
+    # contention ablation: same far-edge regime, double the concurrent
+    # sessions — queue-aware decisions spread load across tiers instead
+    # of stampeding the fastest one
+    eps_big = _workload(n_sessions * 2, seed=seed + 100,
+                        n_vitals=2 if smoke else 4,
+                        n_scene=2 if smoke else 3)
+    edge_tr = BandwidthTrace.static(nlos_bandwidth(25.0))
+    cont = {label: _run(splits, params, table, edge_tr, eps_big, payloads,
+                        tiers=TIERS3, tier_traces={"ph1": ph_near},
+                        contention_aware=aware)
+            for label, aware in (("aware", True), ("blind", False))}
+    result["tiers3"]["contention"] = {
+        "sessions": n_sessions * 2,
+        "aware_total_latency_s": cont["aware"].total_latency_s(),
+        "blind_total_latency_s": cont["blind"].total_latency_s(),
+        "aware_placements": cont["aware"].placement_counts(),
+        "blind_placements": cont["blind"].placement_counts(),
+        "aware_not_worse": bool(cont["aware"].total_latency_s()
+                                <= cont["blind"].total_latency_s() * 1.05),
+    }
+    C.csv_row("tiered3_contention",
+              cont["aware"].total_latency_s() * 1e6,
+              f"blind={cont['blind'].total_latency_s()*1e3:.1f}ms")
+
+    # ---- crash -> failover -> rejoin: the edge box dies mid-incident
+    # and restarts later; a rejoined tier re-warms its replica from the
+    # glass cache and must be re-selected, with latency recovering to
+    # the pre-crash regime
+    eps_long = _workload(n_sessions, seed=seed + 7,
+                         n_vitals=6 if smoke else 10,
+                         n_scene=3 if smoke else 5)
+    span = horizon(eps_long)
+    tc, tr = 0.4 * span, 0.7 * span
+    mk_rj = lambda **kw: _run(  # noqa: E731
+        splits, params, table, BandwidthTrace.static(nlos_bandwidth(5.0)),
+        eps_long, payloads, tiers=TIERS3, tier_traces={"ph1": ph_near},
+        **kw)
+    rj = mk_rj(crash_at=tc, rejoin_at=tr)
+    nocrash = mk_rj()               # same workload, the edge never dies
+    mean_ms = lambda rs: (float(np.mean([r.latency_s for r in rs])) * 1e3  # noqa: E731
+                          if rs else 0.0)
+    window = lambda recs, lo, hi: [r for r in recs  # noqa: E731
+                                   if lo <= r.t_arrival < hi]
+    # the modality mix differs per window, so recovery compares each
+    # window against the SAME window of the no-crash run rather than
+    # against a differently-composed earlier window
+    wins = {}
+    for name_w, lo, hi in (("pre_crash", 0.0, tc), ("outage", tc, tr),
+                           ("post_rejoin", tr, float("inf"))):
+        wins[name_w] = {
+            "n": len(window(rj.records, lo, hi)),
+            "mean_ms": mean_ms(window(rj.records, lo, hi)),
+            "no_crash_mean_ms": mean_ms(window(nocrash.records, lo, hi)),
+        }
+    post = window(rj.records, tr, float("inf"))
+    post_rejoined = sum(1 for r in post
+                        if "edge64x" in (r.enc_tier, r.tail_tier))
+    recovered = bool(post and wins["post_rejoin"]["mean_ms"]
+                     <= wins["post_rejoin"]["no_crash_mean_ms"] * 1.15)
+    result["rejoin"] = {
+        "crash_at_s": tc, "rejoin_at_s": tr,
+        "rejoins": rj.rejoin_count, "fallbacks": rj.fallback_count,
+        "windows": wins,
+        "post_rejoin_events_on_rejoined_tier": post_rejoined,
+        "outage_hurt": bool(wins["outage"]["mean_ms"]
+                            > wins["outage"]["no_crash_mean_ms"]),
+        "recovered_to_no_crash_latency": recovered,
+        "finals_match_full_atol0": _finals_match_full(rj, eps_long, want),
+        **_summary(rj),
+    }
+    C.csv_row("tiered3_rejoin", rj.total_latency_s() * 1e6,
+              f"pre={wins['pre_crash']['mean_ms']:.1f}ms;"
+              f"outage={wins['outage']['mean_ms']:.1f}ms;"
+              f"post={wins['post_rejoin']['mean_ms']:.1f}ms;"
+              f"rejoins={rj.rejoin_count}")
+
     # ---- acceptance
     paper_speedups = {r: result["regimes"][r]["speedup_adaptive_vs_glass"]
                       for r in PAPER_REGIMES if r in result["regimes"]}
@@ -262,6 +417,18 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
         and finals_ok and parity_ok)
     result["passed_stream_composition"] = bool(
         len(leads) >= 1 and partials_ok and comp_finals_ok)
+    three = [e for e in result["tiers3"].values()
+             if "adaptive_beats_best_static" in e]
+    result["passed_3tier_beats_static"] = (
+        any(e["adaptive_beats_best_static"] for e in three)
+        and all(e["finals_match_full_atol0"] for e in three))
+    result["passed_rejoin_recovery"] = bool(
+        result["rejoin"]["rejoins"] >= 1
+        and result["rejoin"]["fallbacks"] >= 1
+        and result["rejoin"]["outage_hurt"]
+        and result["rejoin"]["recovered_to_no_crash_latency"]
+        and result["rejoin"]["post_rejoin_events_on_rejoined_tier"] >= 1
+        and result["rejoin"]["finals_match_full_atol0"])
 
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_tiered.json").write_text(json.dumps(result, indent=2))
@@ -270,7 +437,9 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
         failed = [k for k in ("passed_speedup_1p9x",
                               "passed_adaptive_not_worse",
                               "passed_outage_recovery",
-                              "passed_stream_composition")
+                              "passed_stream_composition",
+                              "passed_3tier_beats_static",
+                              "passed_rejoin_recovery")
                   if not result[k]]
         if failed:
             raise SystemExit(f"tiered acceptance failed: {failed}; "

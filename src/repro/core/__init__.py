@@ -8,7 +8,9 @@ from .episodes import (Event, LAG_SCENARIOS, async_episode,  # noqa: F401
 from .feature_cache import FeatureCache, StalenessError  # noqa: F401
 from .modular import (MultimodalModule, emsnet_module,  # noqa: F401
                       emsnet_subset_module, emsnet_zoo)
-from .offload import (AdaptiveOffloadPolicy, BandwidthTrace,  # noqa: F401
-                      HeartbeatMonitor, ProfileTable, nlos_bandwidth)
+from .offload import (TIER_FACTORS, AdaptiveOffloadPolicy,  # noqa: F401
+                      BandwidthTrace, HeartbeatMonitor, MultiTierPolicy,
+                      ProfileTable, TierDecision, TierEstimate,
+                      nlos_bandwidth)
 from .splitter import (SplitModel, feature_sizes,  # noqa: F401
                        payload_nbytes, profile, split)

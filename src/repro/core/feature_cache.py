@@ -77,6 +77,11 @@ class FeatureCache:
         (byte accounting, eviction scans), not the serving fuse path."""
         return self._store.get((session, modality))
 
+    def entries(self):
+        """Iterate ((session, modality), entry) pairs — replica re-warm
+        scans after a tier restart read the whole live cache."""
+        return self._store.items()
+
     def touch(self, session: str, modality: str, step: int):
         """Re-stamp an entry (edge returned it alongside a result)."""
         e = self._store.get((session, modality))

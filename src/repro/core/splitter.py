@@ -32,6 +32,15 @@ class SplitModel:
     def modalities(self):
         return self.module.modalities
 
+    def submodules(self):
+        """The independently *placeable* pieces of this model, in the
+        naming the profiling/placement layers address them by: one
+        ``"enc:<modality>"`` per encoder plus the fused ``"tail"`` —
+        the same keys :func:`profile` emits and
+        ``core.offload.MultiTierPolicy`` places (each may land on a
+        different hardware tier)."""
+        return tuple(f"enc:{m}" for m in self.module.modalities) + ("tail",)
+
     def compile_count(self) -> int:
         """Total XLA compilations across this model's jitted callables —
         the number the shape bucketer bounds. Non-jitted splits report 0."""

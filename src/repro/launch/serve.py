@@ -101,22 +101,24 @@ def _print_tiered(eng, n_sessions):
         fb = " !! failover" if r.fallback else ""
         gp = (f" (glass partial @{r.glass_partial.t_emit:6.2f}s)"
               if r.glass_partial is not None else "")
+        split = (f" tail={r.tail_tier}" if r.tail_tier is not None
+                 and r.tail_tier != r.enc_tier else "")
         print(f"[{r.sid:4s} {r.index:2d}] {r.modality:6s} "
-              f"tier={r.tier:5s} {r.kind:7s} "
+              f"tier={r.tier:7s} {r.kind:7s} "
               f"up={r.uplink_s*1e3:6.1f}ms "
               f"compute={r.compute_s*1e3:7.1f}ms "
               f"down={r.downlink_s*1e3:6.1f}ms "
-              f"latency={r.latency_s*1e3:8.1f}ms{fb}{gp}")
+              f"latency={r.latency_s*1e3:8.1f}ms{fb}{split}{gp}")
     pc = eng.placement_counts()
-    ts = eng.transport_stats()
+    fallbacks = pc.pop("fallbacks")
+    placed = " / ".join(f"{n} {tier}" for tier, n in pc.items())
     print(f"\n{n_sessions} sessions, {eng.events_total} arrivals: "
-          f"{pc['edge']} offloaded / {pc['glass']} on-glass / "
-          f"{pc['fallbacks']} crash failovers")
-    print(f"cumulative serving latency {eng.total_latency_s()*1e3:.1f} ms"
-          f" | uplink {ts['uplink']['bytes']/1e6:.2f} MB in "
-          f"{ts['uplink']['msgs']} msgs | downlink "
-          f"{ts['downlink']['bytes']/1e3:.1f} KB in "
-          f"{ts['downlink']['msgs']} msgs")
+          f"{placed} / {fallbacks} crash failovers / "
+          f"{eng.rejoin_count} rejoins")
+    for link, s in eng.transport_stats()["links"].items():
+        print(f"  link {link:18s} {s['bytes']/1e6:8.2f} MB in "
+              f"{s['msgs']:3d} msgs")
+    print(f"cumulative serving latency {eng.total_latency_s()*1e3:.1f} ms")
 
 
 def _print_stream(eng, eps):
@@ -168,6 +170,10 @@ def serve_unified(args):
     if args.outage_at >= 0 and not tiered:
         raise SystemExit("--outage-at requires a tiered spec "
                          "(e.g. --engine stream+tiered)")
+    if args.rejoin_at >= 0 and args.outage_at < 0:
+        raise SystemExit("--rejoin-at requires --outage-at")
+    if args.tiers and not tiered:
+        raise SystemExit("--tiers requires a tiered spec")
     if args.deadline_ms and not stream:
         raise SystemExit("--deadline-ms requires a stream spec")
     if args.wall_clock and not (stream or tiered):
@@ -187,6 +193,21 @@ def serve_unified(args):
         base = profile(full, params["text+vitals+scene"], payloads, iters=3)
         kw["profile"] = ProfileTable(base=base)
         kw["trace"] = _mobility_trace(args.mobility)
+        if args.tiers:
+            from repro.core import TIER_FACTORS
+            tiers = tuple(t.strip() for t in args.tiers.split(",")
+                          if t.strip())
+            unknown = [t for t in tiers if t not in TIER_FACTORS]
+            if unknown or len(tiers) < 2:
+                raise SystemExit(
+                    f"--tiers: unknown tier(s) {unknown} or too few; "
+                    f"pick >= 2 of {sorted(TIER_FACTORS)} (local first)")
+            kw["tiers"] = tiers
+            # the EMT's phone rides in a pocket: a near-field tether,
+            # unlike the distance-degraded glass<->edge WiFi
+            from repro.core import BandwidthTrace, nlos_bandwidth
+            kw["tier_traces"] = {t: BandwidthTrace.static(nlos_bandwidth(0.0))
+                                 for t in tiers[1:] if t.startswith("ph")}
     if stream:
         kw["deadline_s"] = (args.deadline_ms / 1e3 if args.wall_clock
                             else None)
@@ -201,7 +222,9 @@ def serve_unified(args):
     if tiered:
         eps = scenario_episodes(n, args.scenario)
         if args.outage_at >= 0:
-            eng.inject_edge_crash(args.outage_at)
+            eng.inject_crash(args.outage_at,
+                             rejoin_at=(args.rejoin_at
+                                        if args.rejoin_at >= 0 else None))
         if args.wall_clock:
             from repro.serving.event_loop import WallClockDriver
             WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
@@ -280,8 +303,18 @@ def main():
                     help="stream spec: coalesce arrivals within this "
                          "window before flushing (0 = flush per arrival)")
     ap.add_argument("--outage-at", type=float, default=-1.0, metavar="S",
-                    help="tiered spec: kill the edge at episode second S "
-                         "(heartbeat-detected on-glass failover)")
+                    help="tiered spec: kill the (fastest) remote tier at "
+                         "episode second S (heartbeat-detected on-glass "
+                         "failover)")
+    ap.add_argument("--rejoin-at", type=float, default=-1.0, metavar="S",
+                    help="tiered spec: restart the crashed tier at episode "
+                         "second S (replica re-warm from the glass cache, "
+                         "placement-eligible again)")
+    ap.add_argument("--tiers", default="", metavar="LIST",
+                    help="tiered spec: comma-separated ordered tier list "
+                         "from core.offload.TIER_FACTORS, local first "
+                         "(e.g. glass,ph1,edge64x); enables contention-"
+                         "aware decisions and per-submodule tail placement")
     ap.add_argument("--wall-clock", action="store_true",
                     help="stream/tiered specs: replay arrivals and pump "
                          "deadline flushes from a monotonic clock")

@@ -11,9 +11,12 @@ factory:
     batched XLA call per (modality, bucket) per flush, one host sync;
   * ``StreamPolicy`` — progressive partial->final predictions, flush
     deadlines, cross-incident session eviction;
-  * ``PlacementPolicy`` — glass<->edge tier hosts on simulated clocks,
-    live offload decisions, byte-accounted transport, heartbeat-
-    detected edge-crash failover.
+  * ``PlacementPolicy`` — N tier hosts on simulated clocks (the legacy
+    glass<->edge pair, or ``tiers=("glass", "ph1", "edge64x")``), live
+    per-submodule offload decisions (encoder and fusion tail placed
+    independently), contention-aware cost estimates, byte-accounted
+    per-link transport (``transport.TierFabric``), heartbeat-detected
+    crash failover, and tier restart/rejoin with replica re-warm.
 
 Policies compose: ``build_engine(models, params, "stream+tiered", ...)``
 streams on-glass provisional partials while the edge computes finals —
@@ -46,5 +49,5 @@ from .event_loop import LoopStats, WallClockDriver  # noqa: F401
 from .stream_engine import (StreamFlushReport,  # noqa: F401
                             StreamingEMSServe, StreamSession)
 from .tiered_runtime import TieredEMSServe, TierSession  # noqa: F401
-from .transport import (Delivery, TransportChannel,  # noqa: F401
-                        payload_nbytes)
+from .transport import (Delivery, MinTrace, TierFabric,  # noqa: F401
+                        TransportChannel, payload_nbytes)

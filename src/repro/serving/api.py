@@ -14,11 +14,15 @@ assembled from orthogonal, composable policy objects:
     wall-clock flush deadlines, cross-incident session eviction
     (idle timeout + LRU cap), and — under tiered placement — on-glass
     provisional partials while the edge computes the refreshed result;
-  * :class:`PlacementPolicy` — glass<->edge tier hosts on simulated
-    busy-clocks, live per-arrival offload decisions through the
-    heartbeat-quantized monitor, byte-accounted in-order feature
-    transport, and heartbeat-detected edge-crash failover from the
-    versioned feature cache.
+  * :class:`PlacementPolicy` — N tier hosts on simulated busy-clocks
+    (the legacy glass<->edge pair, or an ordered ``tiers`` list like
+    ``("glass", "ph1", "edge64x")``), live per-arrival decisions
+    through per-link heartbeat-quantized monitors with each host's
+    queueing delay in the estimate, per-submodule placement (the
+    fusion tail may run on a different tier than its encoder),
+    byte-accounted in-order per-link transport, heartbeat-detected
+    crash failover from the versioned feature cache, and tier
+    restart/rejoin with replica re-warm.
 
 Engines are built from a config spec by :func:`build_engine` (xFormers
 factory idiom: the spec is data, the factory types it):
@@ -72,10 +76,10 @@ import jax
 from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
 from repro.core.episodes import Event, merge_arrivals
 from repro.core.feature_cache import FeatureCache
-from repro.core.offload import (AdaptiveOffloadPolicy, BandwidthTrace,
-                                Decision, HeartbeatMonitor, ProfileTable)
+from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
+                                MultiTierPolicy, ProfileTable, TierDecision)
 from repro.core.splitter import SplitModel, select_model
-from repro.serving.transport import TransportChannel, payload_nbytes
+from repro.serving.transport import TierFabric, payload_nbytes
 
 __all__ = [
     "Arrival", "Prediction", "FlushReport", "SessionView", "TieredRecord",
@@ -196,13 +200,27 @@ class TierHost:
 
 
 @dataclass
+class _TierFault:
+    """Crash / detection / restart state of one remote tier."""
+    crash_at: Optional[float] = None     # when the box actually dies
+    detect_at: Optional[float] = None    # first missed heartbeat after it
+    rejoin_at: Optional[float] = None    # when a restarted box comes back
+    dead: bool = False                   # the glasses KNOW it is gone
+
+
+@dataclass
 class TieredRecord:
-    """Timeline of one arrival through tiered placement."""
+    """Timeline of one arrival through tiered placement. The schema is
+    tier-count-agnostic: ``tier`` names whichever host ran the encoder
+    (any of the N configured hosts, not just 'glass'/'edge'), and
+    per-submodule placement is broken out in ``enc_tier``/``tail_tier``
+    (the tail may run on a third host, or nowhere when the modality
+    subset is still incomplete)."""
     sid: str
     index: int
     modality: str
     model: Optional[str]
-    tier: str                   # where the work actually ran
+    tier: str                   # host that ran the encoder (bulk compute)
     kind: str                   # 'partial' | 'final'
     t_arrival: float
     t_start: float              # when the glasses picked the event up
@@ -210,10 +228,14 @@ class TieredRecord:
     uplink_s: float = 0.0       # payload + cache-sync transfer time
     downlink_s: float = 0.0     # feature + outputs return transfer time
     compute_s: float = 0.0
-    fallback: bool = False      # edge crashed mid-flight; re-ran on glass
+    fallback: bool = False      # a tier crashed mid-flight; re-ran on glass
     detect_s: float = 0.0       # stall waiting on missed-heartbeat detection
-    decision: Optional[Decision] = None
+    decision: Optional[TierDecision] = None
     outputs: Optional[dict] = None
+    # per-submodule placement (tail may differ from the encoder's host)
+    enc_tier: Optional[str] = None
+    tail_tier: Optional[str] = None             # None: no fusion ran
+    tail_decision: Optional[TierDecision] = None
     # stream x tiered composition: the on-glass provisional prediction
     # emitted from cached features while this offload was in flight
     glass_partial: Optional[Prediction] = None
@@ -265,19 +287,44 @@ class StreamPolicy:
 
 @dataclass
 class PlacementPolicy:
-    """Glass<->edge tier placement knobs. ``profile`` is the one-time
-    offline profiling result; ``trace`` drives both the heartbeat
-    monitor (decisions) and the transport links (true wire bandwidth).
-    ``force='glass'|'edge'`` pins placement for ablations;
-    ``adaptive=False`` always offloads."""
+    """Tier placement knobs — two named tiers by default (the historical
+    glass<->edge pair), or an ordered N-tier list.
+
+    ``profile`` is the one-time offline profiling result; ``trace``
+    drives both the heartbeat monitors (decisions) and the transport
+    links (true wire bandwidth). ``tiers`` generalizes: an ordered list
+    of ``ProfileTable.factors`` keys (e.g. ``("glass", "ph1",
+    "edge64x")``) whose FIRST entry is the local host (the glasses);
+    each remote's radio link defaults to ``trace`` and can be overridden
+    per host via ``tier_traces``. With ``tiers`` set the engine also
+    turns on the two N-tier capabilities by default:
+
+      * ``contention_aware`` — the decision rule adds each host's
+        current work-queue delay to its estimate, so concurrent
+        sessions spread across tiers instead of stampeding the fastest;
+      * ``tail_placement`` — the fusion tail is placed separately from
+        the encoder that feeds it (a scene encoder can run on the edge
+        box while its tail runs on the phone), paying the feature
+        transfer between the two placements.
+
+    Both default to the paper-verbatim contention-blind, co-located
+    behavior when ``tiers`` is None (the legacy pair), keeping every
+    historical timeline bit-reproducible; pass True/False to override
+    either way. ``force`` pins placement for ablations: a host name
+    pins everything, a ``{submodule: host}`` dict pins per submodule.
+    ``adaptive=False`` always offloads to the cheapest remote."""
     profile: ProfileTable
     trace: BandwidthTrace
+    tiers: Optional[Tuple[str, ...]] = None
+    tier_traces: Optional[Dict[str, BandwidthTrace]] = None
     glass_tier: str = "glass"
     edge_tier: str = "edge4c"
     hb_period: float = 1.0
     link_latency_s: float = 0.005
     adaptive: bool = True
-    force: Optional[str] = None
+    force: Optional[Union[str, Dict[str, str]]] = None
+    contention_aware: Optional[bool] = None     # None = on iff N-tier
+    tail_placement: Optional[bool] = None       # None = on iff N-tier
 
 
 @dataclass
@@ -376,35 +423,62 @@ class EMSServeEngine:
         self._enc_calls_total = 0
         self._tail_calls_total = 0
 
-        # ---- placement policy -> tier hosts, transport, fault state
+        # ---- placement policy -> tier hosts, link fabric, fault state
         self.records: List[TieredRecord] = []
         if placement is not None:
             pp = placement
             self.profile = pp.profile
-            self.monitor = HeartbeatMonitor(pp.trace, period=pp.hb_period)
-            self.policy = AdaptiveOffloadPolicy(
-                pp.profile, self.monitor, glass_tier=pp.glass_tier,
-                edge_tier=pp.edge_tier, adaptive=pp.adaptive, force=pp.force)
-            self.glass = TierHost("glass", pp.glass_tier, pp.profile)
-            self.edge = TierHost("edge", pp.edge_tier, pp.profile)
-            self.uplink = TransportChannel(pp.trace,
-                                           latency_s=pp.link_latency_s,
-                                           name="glass->edge")
-            self.downlink = TransportChannel(pp.trace,
-                                             latency_s=pp.link_latency_s,
-                                             name="edge->glass")
-            # edge replica freshness: (cache key, modality) -> feature
-            # VERSION the edge holds (versions only bump on real
-            # re-encodes; steps get re-stamped by every touch, which
-            # would force spurious re-ships)
-            self._edge_versions: Dict[Tuple[str, str], int] = {}
-            # fault injection / detection
-            self.crash_at: Optional[float] = None
-            self.detect_at: Optional[float] = None
-            self.edge_known_dead = False
+            multi = pp.tiers is not None
+            # host names double as ProfileTable factor keys in N-tier
+            # mode; the legacy pair keeps its historical display names
+            names = list(pp.tiers) if multi else ["glass", "edge"]
+            keys = names if multi else [pp.glass_tier, pp.edge_tier]
+            if len(names) < 2:
+                raise ValueError("tiered placement needs the local host "
+                                 "plus at least one remote tier")
+            self.local_name = names[0]
+            self.hosts: Dict[str, TierHost] = {
+                n: TierHost(n, k, pp.profile) for n, k in zip(names, keys)}
+            self.remote_names = names[1:]
+            traces = {n: (pp.tier_traces or {}).get(n, pp.trace)
+                      for n in self.remote_names}
+            self.monitors = {n: HeartbeatMonitor(traces[n],
+                                                 period=pp.hb_period)
+                             for n in self.remote_names}
+            self.fabric = TierFabric(self.local_name, traces,
+                                     latency_s=pp.link_latency_s)
+            self.policy = MultiTierPolicy(
+                pp.profile, self.monitors, local=self.local_name,
+                tier_of={n: h.tier for n, h in self.hosts.items()},
+                adaptive=pp.adaptive, force=pp.force)
+            # the fastest remote is the legacy 'edge' for the 2-tier
+            # accessor surface (uplink/downlink/crash_at/...)
+            self._primary = min(
+                self.remote_names,
+                key=lambda n: pp.profile.factors[self.hosts[n].tier])
+            self.monitor = self.monitors[self._primary]
+            # the two N-tier capabilities default on exactly when the
+            # N-tier surface is used, so legacy timelines stay
+            # bit-reproducible
+            self.contention_aware = (multi if pp.contention_aware is None
+                                     else pp.contention_aware)
+            self.tail_placement = (multi if pp.tail_placement is None
+                                   else pp.tail_placement)
+            # per-tier replica freshness: (cache key, modality) ->
+            # feature VERSION that host holds (versions only bump on
+            # real re-encodes; steps get re-stamped by every touch,
+            # which would force spurious re-ships)
+            self._replica_versions: Dict[str, Dict[Tuple[str, str], int]] \
+                = {n: {} for n in self.remote_names}
+            # fault injection / detection / restart, per remote tier
+            self._faults: Dict[str, _TierFault] = {
+                n: _TierFault() for n in self.remote_names}
             self.fallback_count = 0
+            self.rejoin_count = 0
             self.offloaded_count = 0
             self.on_glass_count = 0
+            self.place_counts: Dict[str, int] = {n: 0 for n in names}
+            self.tail_counts: Dict[str, int] = {n: 0 for n in names}
             self._total_latency = 0.0
 
     # ------------------------------------------------------------ setup
@@ -661,13 +735,13 @@ class EMSServeEngine:
         for key in keys:
             self.cache.drop_session(key)
         if self.tiered:
-            # forget the edge replica's versions too: a re-created
+            # forget every tier replica's versions too: a re-created
             # session restarts its version counters at 0, and a stale
             # high-water mark would wrongly skip re-shipping features
             dropped = set(keys)
-            self._edge_versions = {k: v for k, v in
-                                   self._edge_versions.items()
-                                   if k[0] not in dropped}
+            for versions in self._replica_versions.values():
+                for k in [k for k in versions if k[0] in dropped]:
+                    del versions[k]
         del self.sessions[sid]
         self.evicted_count += 1
 
@@ -706,26 +780,122 @@ class EMSServeEngine:
     # Tiered placement path (per-arrival on the simulated tier clocks)
     # ==================================================================
 
+    # ----- legacy 2-tier accessor surface (maps onto the fastest remote)
+
+    @property
+    def glass(self) -> TierHost:
+        return self.hosts[self.local_name]
+
+    @property
+    def edge(self) -> TierHost:
+        return self.hosts[self._primary]
+
+    @property
+    def uplink(self):
+        return self.fabric.channel(self.local_name, self._primary)
+
+    @property
+    def downlink(self):
+        return self.fabric.channel(self._primary, self.local_name)
+
+    @property
+    def crash_at(self) -> Optional[float]:
+        return self._faults[self._primary].crash_at
+
+    @property
+    def detect_at(self) -> Optional[float]:
+        return self._faults[self._primary].detect_at
+
+    @property
+    def edge_known_dead(self) -> bool:
+        return self._faults[self._primary].dead
+
+    @property
+    def _edge_versions(self) -> Dict[Tuple[str, str], int]:
+        return self._replica_versions[self._primary]
+
+    # ----- fault injection / detection / rejoin
+
+    def inject_crash(self, t: float, tier: Optional[str] = None, *,
+                     rejoin_at: Optional[float] = None):
+        """Tier ``tier`` (default: the fastest remote) dies at simulated
+        time ``t``. The glasses learn of it at the first missed
+        heartbeat strictly after ``t``. With ``rejoin_at``, a restarted
+        box comes back at that time: it re-warms its feature-cache
+        replica from the glass-side versioned cache and becomes eligible
+        for placement again."""
+        tier = self._primary if tier is None else tier
+        f = self._faults[tier]
+        f.crash_at = t
+        period = self.monitors[tier].period
+        f.detect_at = (math.floor(t / period) + 1) * period
+        if rejoin_at is not None:
+            self.schedule_rejoin(rejoin_at, tier)
+
     def inject_edge_crash(self, t: float):
-        """The edge box dies at simulated time ``t``. The glasses learn
-        of it at the first missed heartbeat strictly after ``t``."""
-        self.crash_at = t
-        period = self.monitor.period
-        self.detect_at = (math.floor(t / period) + 1) * period
+        self.inject_crash(t)
 
-    def _mark_edge_dead(self):
-        self.edge_known_dead = True
-        self.policy.force = "glass"       # all future decisions: on-glass
-        self._edge_versions.clear()       # the edge replica is gone
+    def schedule_rejoin(self, t: float, tier: Optional[str] = None):
+        tier = self._primary if tier is None else tier
+        f = self._faults[tier]
+        if f.crash_at is not None and t <= f.crash_at:
+            raise ValueError(f"rejoin at {t} precedes the crash at "
+                             f"{f.crash_at}")
+        f.rejoin_at = t
 
-    def _edge_usable(self, now: float) -> bool:
-        if self.edge_known_dead:
-            return False
-        if self.detect_at is not None and now >= self.detect_at:
-            # a background heartbeat already went unanswered
-            self._mark_edge_dead()
-            return False
-        return True
+    def _mark_dead(self, tier: str):
+        self._faults[tier].dead = True
+        self._replica_versions[tier].clear()   # that replica is gone
+
+    def _rejoin(self, tier: str, t: float):
+        """A restarted tier comes back: fresh fault state, fresh busy
+        clock, and a replica re-warm shipped from the glass-side
+        versioned cache (one bulk message on its link at the rejoin
+        instant), after which it is placement-eligible again."""
+        self._faults[tier] = _TierFault()
+        host = self.hosts[tier]
+        # a restarted box boots idle: anything still on its clock is
+        # phantom occupancy from flights the crash already lost
+        host.free_at = t
+        versions = self._replica_versions[tier]
+        warm_b = 0
+        for (key, m), e in self.cache.entries():
+            if versions.get((key, m), -1) < e.version:
+                warm_b += payload_nbytes(e.feature)
+                versions[(key, m)] = e.version
+        if warm_b:
+            self.fabric.channel(self.local_name, tier).send(warm_b, t)
+        self.rejoin_count += 1
+
+    def _usable_remotes(self, now: float) -> List[str]:
+        """Remote tiers a decision made at ``now`` may target, applying
+        any heartbeat detection or restart the clock has crossed."""
+        out = []
+        for n in self.remote_names:
+            f = self._faults[n]
+            if not f.dead and f.detect_at is not None \
+                    and now >= f.detect_at:
+                self._mark_dead(n)
+            if f.dead and f.rejoin_at is not None and now >= f.rejoin_at:
+                self._rejoin(n, f.rejoin_at)
+            if not self._faults[n].dead:
+                out.append(n)
+        return out
+
+    def _dies_before(self, tier: str, t: float) -> bool:
+        """Does ``tier`` crash before simulated time ``t``? (A sender
+        must survive through the END of its own transmission.)"""
+        f = self._faults.get(tier)
+        return (f is not None and f.crash_at is not None
+                and f.crash_at < t)
+
+    def _queues(self, now: float) -> Optional[Dict[str, float]]:
+        """Per-host queueing delay feeding contention-aware decisions
+        (None = the contention-blind paper rule)."""
+        if not self.contention_aware:
+            return None
+        return {n: max(0.0, h.free_at - now)
+                for n, h in self.hosts.items()}
 
     def _payload_bytes(self, m: str, payload) -> int:
         """Raw sensor bytes for the uplink: the module's declared size
@@ -799,10 +969,11 @@ class EMSServeEngine:
 
     def _submit_tiered(self, sid: str, event: Event, payload, *,
                        aggregate=None) -> TieredRecord:
-        """Process one arriving datum end to end: decide tier, encode
-        there, transport, re-fuse on glass, emit. With the stream
-        policy's ``glass_partials``, an offloaded arrival also yields an
-        immediate on-glass provisional partial from cached features."""
+        """Process one arriving datum end to end: decide a tier per
+        submodule, encode there, transport, re-fuse, emit on glass. With
+        the stream policy's ``glass_partials``, an offloaded arrival
+        also yields an immediate on-glass provisional partial from
+        cached features."""
         prev_observed = set(self.session(sid).inputs)
         st = self._intake(sid, event, payload, aggregate)
         st.dirty.clear()        # per-arrival mode: nothing buffers
@@ -813,17 +984,25 @@ class EMSServeEngine:
         now = max(t_a, st.ready_at)
         model_name = select_model(self.models, st.inputs)
         payload_b = self._payload_bytes(event.modality, st.inputs[event.modality])
-        dec = self.policy.decide(f"enc:{event.modality}", payload_b, now)
+        avail = self._usable_remotes(now)
+        queues = self._queues(now)
+        dec = self.policy.decide(f"enc:{event.modality}", payload_b, now,
+                                 queues=queues, available=avail)
 
         partial = None
-        if dec.tier == "edge" and self._edge_usable(now):
-            if self.glass_partials:
-                partial = self._glass_provisional(st, prev_observed, now)
-            rec = self._edge_event(st, event, model_name, payload_b,
-                                   now, dec)
+        if dec.tier != self.local_name and self.glass_partials:
+            partial = self._glass_provisional(st, prev_observed, now)
+        if self.tail_placement:
+            rec = self._placed_event(st, event, model_name, payload_b,
+                                     now, dec, avail, queues,
+                                     prev_observed)
+        elif dec.tier != self.local_name:
+            rec = self._remote_event(st, event, model_name, payload_b,
+                                     now, dec, dec.tier)
         else:
             rec = self._glass_event(st, event, model_name, now, dec)
-        rec.glass_partial = partial
+        if partial is not None:
+            rec.glass_partial = partial
 
         st.ready_at = rec.t_emit
         st.t_last_activity = rec.t_emit        # simulated clock
@@ -885,65 +1064,113 @@ class EMSServeEngine:
         mods = frozenset(self.models[model_name].modalities())
         return "final" if mods == self.full_set else "partial"
 
-    def _glass_event(self, st: SessionView, event: Event,
-                     model_name: Optional[str], now: float, dec: Decision,
-                     *, fallback: bool = False,
-                     detect_s: float = 0.0) -> TieredRecord:
-        m = event.modality
-        feats = self._run_encoders(st, m)
-        self._commit_features(st, m, feats, tier="glass")
-        outputs = None
+    def _sync_bytes(self, tier: str, st: SessionView,
+                    model_name: Optional[str], *, skip: str):
+        """Bytes needed to bring ``tier``'s replica up to date on every
+        cached feature the selected model consumes (except ``skip``, the
+        freshly arriving modality), plus the (replica key, version)
+        pairs to stamp once the path succeeds."""
+        sync_b, synced = 0, []
         if model_name is not None:
+            versions = self._replica_versions[tier]
+            key = self._cache_key(st.sid, model_name)
+            for mm in self.models[model_name].modalities():
+                if mm == skip:
+                    continue
+                e = self.cache.peek(key, mm)
+                if e is not None and \
+                        versions.get((key, mm), -1) < e.version:
+                    sync_b += payload_nbytes(e.feature)
+                    synced.append(((key, mm), e.version))
+        return sync_b, synced
+
+    def _stamp_fresh(self, tier: str, st: SessionView, m: str):
+        """``tier``'s replica now holds the fresh feature(s) of ``m``."""
+        versions = self._replica_versions[tier]
+        for name in self.models:
+            key = self._cache_key(st.sid, name)
+            e = self.cache.peek(key, m)
+            if e is not None:
+                versions[(key, m)] = e.version
+
+    def _crash_fallback(self, tier: str, st: SessionView, event: Event,
+                        model_name: Optional[str], now: float,
+                        dec: TierDecision, *, feats=None,
+                        outputs=None) -> TieredRecord:
+        """A remote participant died before its transmission completed:
+        mark it dead at the first missed heartbeat and re-run the whole
+        event on glass from there (the already-computed numerics are
+        reused — placement never changes the math, so the re-run's
+        arrays are the in-flight ones)."""
+        t_detect = max(now, self._faults[tier].detect_at)
+        self._mark_dead(tier)
+        return self._glass_event(st, event, model_name, t_detect, dec,
+                                 fallback=True,
+                                 detect_s=max(0.0, t_detect - now),
+                                 feats=feats, outputs=outputs)
+
+    def _glass_event(self, st: SessionView, event: Event,
+                     model_name: Optional[str], now: float,
+                     dec: TierDecision, *, fallback: bool = False,
+                     detect_s: float = 0.0, feats=None,
+                     outputs=None) -> TieredRecord:
+        m = event.modality
+        local = self.local_name
+        if feats is None:
+            feats = self._run_encoders(st, m)
+        self._commit_features(st, m, feats, tier=local)
+        if outputs is None and model_name is not None:
             gathered = self._gather(st, model_name, m, feats)
             if gathered is not None:
                 outputs = self.models[model_name].tail(
                     self.params[model_name], gathered)
-                self._touch_consumed(st, model_name)
+        if outputs is not None:
+            self._touch_consumed(st, model_name)
         dur = (self._enc_duration(m, len(feats), self.glass)
                if feats else 0.0)
         if outputs is not None:
             dur += self.glass.time("tail")
         start, done = self.glass.occupy(dur, now)
         self.on_glass_count += 1
+        self.place_counts[local] += 1
+        if outputs is not None:
+            self.tail_counts[local] += 1
         if fallback:
             self.fallback_count += 1
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
-            tier="glass", kind=self._kind(model_name),
+            tier=local, kind=self._kind(model_name),
             t_arrival=event.arrival_time, t_start=start, t_emit=done,
             compute_s=dur, fallback=fallback, detect_s=detect_s,
-            decision=dec, outputs=outputs)
+            decision=dec, outputs=outputs, enc_tier=local,
+            tail_tier=local if outputs is not None else None)
 
-    def _edge_event(self, st: SessionView, event: Event,
-                    model_name: Optional[str], payload_b: int,
-                    now: float, dec: Decision) -> TieredRecord:
+    def _remote_event(self, st: SessionView, event: Event,
+                      model_name: Optional[str], payload_b: int,
+                      now: float, dec: TierDecision, A: str, *,
+                      feats=None, outputs=None) -> TieredRecord:
+        """Encoder AND tail on remote tier ``A`` (the co-located path —
+        with ``tail_placement`` off this is the only remote shape)."""
         m = event.modality
-        # ---- uplink: raw payload + any features the edge replica lacks
-        sync_b, synced = 0, []
-        if model_name is not None:
-            key = self._cache_key(st.sid, model_name)
-            for mm in self.models[model_name].modalities():
-                if mm == m:
-                    continue
-                e = self.cache.peek(key, mm)
-                if e is not None and \
-                        self._edge_versions.get((key, mm), -1) < e.version:
-                    sync_b += payload_nbytes(e.feature)
-                    synced.append(((key, mm), e.version))
-        up = self.uplink.send(payload_b + sync_b, now)
+        host = self.hosts[A]
+        up_ch = self.fabric.channel(self.local_name, A)
+        down_ch = self.fabric.channel(A, self.local_name)
+        # ---- uplink: raw payload + any features this replica lacks
+        sync_b, synced = self._sync_bytes(A, st, model_name, skip=m)
+        up = up_ch.send(payload_b + sync_b, now)
 
-        # ---- real numerics (uncommitted) + simulated edge compute
-        feats = self._run_encoders(st, m)
-        outputs = None
-        if model_name is not None:
-            gathered = self._gather(st, model_name, m, feats)
-            if gathered is not None:
-                outputs = self.models[model_name].tail(
-                    self.params[model_name], gathered)
-        dur = self._enc_duration(m, len(feats), self.edge) if feats else 0.0
+        # ---- real numerics (uncommitted) + simulated remote compute
+        if feats is None:
+            feats = self._run_encoders(st, m)
+            if model_name is not None:
+                gathered = self._gather(st, model_name, m, feats)
+                if gathered is not None:
+                    outputs = self.models[model_name].tail(
+                        self.params[model_name], gathered)
+        dur = self._enc_duration(m, len(feats), host) if feats else 0.0
         if outputs is not None:
-            dur += self.edge.time("tail")
-        _start, t_done = self.edge.occupy(dur, up.t_deliver)
+            dur += host.time("tail")
+        _start, t_done = host.occupy(dur, up.t_deliver)
 
         # ---- downlink payload: fresh feature(s) + head outputs + the
         # piggybacked cache re-stamp (an empty-feature result still
@@ -952,45 +1179,253 @@ class EMSServeEngine:
         if outputs is not None:
             down_b += payload_nbytes(outputs)
 
-        # ---- crash window: the edge must survive through the END of
+        # ---- crash window: the tier must survive through the END of
         # its downlink transmission, not just its compute — a death
         # mid-transfer loses the result exactly like one mid-encode
-        if self.crash_at is not None \
-                and self.crash_at < self.downlink.eta(down_b, t_done):
-            t_detect = max(now, self.detect_at)
-            self._mark_edge_dead()
-            return self._glass_event(st, event, model_name, t_detect, dec,
-                                     fallback=True,
-                                     detect_s=max(0.0, t_detect - now))
+        if self._dies_before(A, down_ch.eta(down_b, t_done)):
+            return self._crash_fallback(A, st, event, model_name, now,
+                                        dec, feats=feats, outputs=outputs)
 
         # ---- success: commit to the glass cache, ship the bytes
-        self._commit_features(st, m, feats, tier="edge")
+        self._commit_features(st, m, feats, tier=A)
         if outputs is not None:
             self._touch_consumed(st, model_name)
-        down = self.downlink.send(down_b, t_done)
-        # the edge replica now holds everything it consumed or produced
+        down = down_ch.send(down_b, t_done)
+        # the replica now holds everything it consumed or produced
+        versions = self._replica_versions[A]
         for k, version in synced:
-            self._edge_versions[k] = version
-        for name in feats:
-            key = self._cache_key(st.sid, name)
-            e = self.cache.peek(key, m)
-            if e is not None:
-                self._edge_versions[(key, m)] = e.version
+            versions[k] = version
+        self._stamp_fresh(A, st, m)
         self.offloaded_count += 1
+        self.place_counts[A] += 1
+        if outputs is not None:
+            self.tail_counts[A] += 1
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
-            tier="edge", kind=self._kind(model_name),
+            tier=A, kind=self._kind(model_name),
             t_arrival=event.arrival_time, t_start=up.t_send,
             t_emit=down.t_deliver,
             uplink_s=up.t_deliver - up.t_send,
             downlink_s=down.t_deliver - t_done,
-            compute_s=dur, decision=dec, outputs=outputs)
+            compute_s=dur, decision=dec, outputs=outputs,
+            enc_tier=A, tail_tier=A if outputs is not None else None)
+
+    # ------------------------------------------- per-submodule placement
+
+    def _placed_event(self, st: SessionView, event: Event,
+                      model_name: Optional[str], payload_b: int,
+                      now: float, dec: TierDecision, avail, queues,
+                      prev_observed=()) -> TieredRecord:
+        """Per-submodule placement: the encoder goes to ``dec.tier``;
+        when a fusion will run, the tail gets its OWN argmin placement
+        (possibly a third host), paying the feature hop between the two
+        and the head-output return to the glasses."""
+        m = event.modality
+        A = dec.tier
+        # will a fusion actually run? (fresh feature for m, every other
+        # consumed modality already cached)
+        fusible = False
+        if model_name is not None:
+            have_fresh = bool(self._consumers(m))
+            key = self._cache_key(st.sid, model_name)
+            fusible = all((mm == m and have_fresh)
+                          or self.cache.peek(key, mm) is not None
+                          for mm in self.models[model_name].modalities())
+        if not fusible:
+            # nothing to place but the encoder
+            if A == self.local_name:
+                return self._glass_event(st, event, model_name, now, dec)
+            return self._remote_event(st, event, model_name, payload_b,
+                                      now, dec, A)
+        # real numerics first: the tail decision weighs the ACTUAL
+        # feature/output byte sizes (placement never changes the math)
+        feats = self._run_encoders(st, m)
+        gathered = self._gather(st, model_name, m, feats)
+        if gathered is None:
+            if A == self.local_name:
+                return self._glass_event(st, event, model_name, now, dec,
+                                         feats=feats)
+            return self._remote_event(st, event, model_name, payload_b,
+                                      now, dec, A, feats=feats)
+        outputs = self.models[model_name].tail(self.params[model_name],
+                                               gathered)
+        feat_b = sum(payload_nbytes(f) for f in feats.values())
+        out_b = payload_nbytes(outputs)
+        dtail = self.policy.decide_tail(feat_b, out_b, A, now,
+                                        queues=queues, available=avail)
+        T = dtail.tier
+        partial = None
+        if A == self.local_name and T != A and self.glass_partials:
+            # the split shape pays a remote round trip even though the
+            # encoder stayed home — the EMT still gets an immediate
+            # provisional from cached features while the tail travels
+            partial = self._glass_provisional(st, prev_observed, now)
+        if T == A:
+            if A == self.local_name:
+                rec = self._glass_event(st, event, model_name, now, dec,
+                                        feats=feats, outputs=outputs)
+            else:
+                rec = self._remote_event(st, event, model_name, payload_b,
+                                         now, dec, A, feats=feats,
+                                         outputs=outputs)
+        else:
+            rec = self._split_event(st, event, model_name, payload_b, now,
+                                    dec, A, T, feats, outputs, feat_b,
+                                    out_b)
+        rec.tail_decision = dtail
+        if partial is not None:
+            rec.glass_partial = partial
+        return rec
+
+    def _split_event(self, st: SessionView, event: Event, model_name: str,
+                     payload_b: int, now: float, dec: TierDecision,
+                     A: str, T: str, feats, outputs, feat_b: int,
+                     out_b: int) -> TieredRecord:
+        """Encoder on ``A``, tail on a different tier ``T``. The fresh
+        features always flow home to the glasses with the result (the
+        paper's cache-carrying discipline), whichever tier computed
+        them; commit stays on-success so a mid-flight death loses the
+        in-flight work, never corrupts the cache."""
+        m = event.modality
+        local = self.local_name
+
+        if A == local:
+            # encoder at home; only the tail travels
+            enc_dur = (self._enc_duration(m, len(feats), self.glass)
+                       if feats else 0.0)
+            start, t_enc_done = self.glass.occupy(enc_dur, now)
+            # glass-computed features are already safe at home
+            self._commit_features(st, m, feats, tier=local)
+            sync_b, synced = self._sync_bytes(T, st, model_name, skip=m)
+            up = self.fabric.channel(local, T).send(feat_b + sync_b,
+                                                    t_enc_done)
+            tail_host = self.hosts[T]
+            _s, t_tail_done = tail_host.occupy(tail_host.time("tail"),
+                                               up.t_deliver)
+            down_ch = self.fabric.channel(T, local)
+            if self._dies_before(T, down_ch.eta(out_b, t_tail_done)):
+                # tail-only fallback: features survived on glass
+                t_detect = max(t_enc_done, self._faults[T].detect_at)
+                self._mark_dead(T)
+                _s2, done = self.glass.occupy(self.glass.time("tail"),
+                                              t_detect)
+                self._touch_consumed(st, model_name)
+                self.on_glass_count += 1
+                self.fallback_count += 1
+                self.place_counts[local] += 1
+                self.tail_counts[local] += 1
+                return TieredRecord(
+                    sid=st.sid, index=event.index, modality=m,
+                    model=model_name, tier=local,
+                    kind=self._kind(model_name),
+                    t_arrival=event.arrival_time, t_start=start,
+                    t_emit=done,
+                    uplink_s=up.t_deliver - up.t_send,
+                    compute_s=enc_dur + self.glass.time("tail"),
+                    fallback=True,
+                    detect_s=max(0.0, t_detect - t_enc_done),
+                    decision=dec, outputs=outputs, enc_tier=local,
+                    tail_tier=local)
+            down = down_ch.send(out_b, t_tail_done)
+            self._touch_consumed(st, model_name)
+            versions = self._replica_versions[T]
+            for k, version in synced:
+                versions[k] = version
+            self._stamp_fresh(T, st, m)
+            self.on_glass_count += 1
+            self.place_counts[local] += 1
+            self.tail_counts[T] += 1
+            return TieredRecord(
+                sid=st.sid, index=event.index, modality=m,
+                model=model_name, tier=local, kind=self._kind(model_name),
+                t_arrival=event.arrival_time, t_start=start,
+                t_emit=down.t_deliver,
+                uplink_s=up.t_deliver - up.t_send,
+                downlink_s=down.t_deliver - t_tail_done,
+                compute_s=enc_dur + tail_host.time("tail"),
+                decision=dec, outputs=outputs, enc_tier=local,
+                tail_tier=T)
+
+        host = self.hosts[A]
+        up = self.fabric.channel(local, A).send(payload_b, now)
+        enc_dur = self._enc_duration(m, len(feats), host) if feats else 0.0
+        _s, t_enc_done = host.occupy(enc_dur, up.t_deliver)
+
+        if T == local:
+            # features come home, fusion runs on the glasses
+            down_ch = self.fabric.channel(A, local)
+            if self._dies_before(A, down_ch.eta(feat_b, t_enc_done)):
+                return self._crash_fallback(A, st, event, model_name, now,
+                                            dec, feats=feats,
+                                            outputs=outputs)
+            down = down_ch.send(feat_b, t_enc_done)
+            self._commit_features(st, m, feats, tier=A)
+            self._stamp_fresh(A, st, m)
+            _s2, done = self.glass.occupy(self.glass.time("tail"),
+                                          down.t_deliver)
+            self._touch_consumed(st, model_name)
+            self.offloaded_count += 1
+            self.place_counts[A] += 1
+            self.tail_counts[local] += 1
+            return TieredRecord(
+                sid=st.sid, index=event.index, modality=m,
+                model=model_name, tier=A, kind=self._kind(model_name),
+                t_arrival=event.arrival_time, t_start=up.t_send,
+                t_emit=done,
+                uplink_s=up.t_deliver - up.t_send,
+                downlink_s=down.t_deliver - t_enc_done,
+                compute_s=enc_dur + self.glass.time("tail"),
+                decision=dec, outputs=outputs, enc_tier=A,
+                tail_tier=local)
+
+        # encoder on A, tail on another remote B: the feature hops
+        # A->B on the direct link while the glasses warm B's replica
+        # in parallel; B returns features + outputs home
+        B = T
+        sync_b, synced = self._sync_bytes(B, st, model_name, skip=m)
+        sync_d = (self.fabric.channel(local, B).send(sync_b, now)
+                  if sync_b else None)
+        hop_ch = self.fabric.channel(A, B)
+        if self._dies_before(A, hop_ch.eta(feat_b, t_enc_done)):
+            return self._crash_fallback(A, st, event, model_name, now,
+                                        dec, feats=feats, outputs=outputs)
+        hop = hop_ch.send(feat_b, t_enc_done)
+        ready = max(hop.t_deliver,
+                    sync_d.t_deliver if sync_d is not None else 0.0)
+        tail_host = self.hosts[B]
+        _s2, t_tail_done = tail_host.occupy(tail_host.time("tail"), ready)
+        down_ch = self.fabric.channel(B, local)
+        down_b = feat_b + out_b         # the result carries the cache home
+        if self._dies_before(B, down_ch.eta(down_b, t_tail_done)):
+            return self._crash_fallback(B, st, event, model_name, now,
+                                        dec, feats=feats, outputs=outputs)
+        down = down_ch.send(down_b, t_tail_done)
+        self._commit_features(st, m, feats, tier=A)
+        self._touch_consumed(st, model_name)
+        versions = self._replica_versions[B]
+        for k, version in synced:
+            versions[k] = version
+        self._stamp_fresh(A, st, m)
+        self._stamp_fresh(B, st, m)
+        self.offloaded_count += 1
+        self.place_counts[A] += 1
+        self.tail_counts[B] += 1
+        return TieredRecord(
+            sid=st.sid, index=event.index, modality=m, model=model_name,
+            tier=A, kind=self._kind(model_name),
+            t_arrival=event.arrival_time, t_start=up.t_send,
+            t_emit=down.t_deliver,
+            uplink_s=up.t_deliver - up.t_send,
+            downlink_s=down.t_deliver - t_tail_done,
+            compute_s=enc_dur + tail_host.time("tail"),
+            decision=dec, outputs=outputs, enc_tier=A, tail_tier=B)
 
     # --------------------------------------------------------- episodes
 
     def run_arrivals(self, episodes: Dict[str, List[Event]], payload_fn,
                      *, aggregate=None, sim_window: Optional[float] = None,
-                     crash_at: Optional[float] = None):
+                     crash_at: Optional[float] = None,
+                     rejoin_at: Optional[float] = None):
         """Drive sessions through their episodes in GLOBAL arrival-time
         order (the field regime: one incident, many responders, one
         interleaved stream — ``core.episodes.merge_arrivals``).
@@ -1008,13 +1443,15 @@ class EMSServeEngine:
         arrivals = merge_arrivals(episodes)
         if self.tiered:
             if crash_at is not None:
-                self.inject_edge_crash(crash_at)
+                self.inject_crash(crash_at, rejoin_at=rejoin_at)
+            elif rejoin_at is not None:
+                raise ValueError("rejoin_at requires crash_at")
             for _t, sid, ev in arrivals:
                 self.submit(sid, ev, payload_fn(sid, ev),
                             aggregate=aggregate)
             return self.records
-        if crash_at is not None:
-            raise ValueError("crash_at requires tiered placement")
+        if crash_at is not None or rejoin_at is not None:
+            raise ValueError("crash_at/rejoin_at require tiered placement")
         if sim_window is None:
             for _t, sid, ev in arrivals:
                 self.submit(sid, ev, payload_fn(sid, ev),
@@ -1107,12 +1544,25 @@ class EMSServeEngine:
         return max((r.t_emit for r in self.records), default=0.0)
 
     def transport_stats(self) -> dict:
+        """Per-link byte accounting. ``uplink``/``downlink`` keep the
+        historical 2-tier view (the glass<->fastest-remote pair);
+        ``links`` breaks out every (src, dst) channel the fabric
+        actually used."""
         return {"uplink": self.uplink.stats(),
-                "downlink": self.downlink.stats()}
+                "downlink": self.downlink.stats(),
+                "links": self.fabric.stats()}
 
     def placement_counts(self) -> dict:
-        return {"edge": self.offloaded_count, "glass": self.on_glass_count,
-                "fallbacks": self.fallback_count}
+        """Events placed per host (by ENCODER tier — the bulk compute),
+        plus crash fallbacks. Tier-count-agnostic: one key per
+        configured host ('glass'/'edge' in the legacy pair)."""
+        return {**self.place_counts, "fallbacks": self.fallback_count}
+
+    def tail_placement_counts(self) -> dict:
+        """Fusions run per host — diverges from ``placement_counts``
+        exactly when per-submodule tail placement split a tail from its
+        encoder."""
+        return dict(self.tail_counts)
 
 
 # ======================================================================

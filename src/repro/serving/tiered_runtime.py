@@ -49,14 +49,23 @@ class TieredEMSServe(EMSServeEngine):
     ``trace`` drives both the heartbeat monitor (decisions) and the
     transport links (true wire bandwidth). ``force='glass'|'edge'`` pins
     placement for ablations; ``adaptive=False`` always offloads.
+
+    ``tiers=("glass", "ph1", "edge64x")`` generalizes to N hosts (first
+    entry local, per-host link traces via ``tier_traces``) and turns on
+    contention-aware decisions and per-submodule tail placement by
+    default; without it, the historical 2-tier contention-blind
+    co-located behavior is preserved bit for bit.
     """
 
     def __init__(self, models: Dict[str, SplitModel],
                  params: Dict[str, dict], *,
                  profile: ProfileTable, trace: BandwidthTrace,
+                 tiers=None, tier_traces=None,
                  glass_tier: str = "glass", edge_tier: str = "edge4c",
                  hb_period: float = 1.0, link_latency_s: float = 0.005,
-                 adaptive: bool = True, force: Optional[str] = None,
+                 adaptive: bool = True, force=None,
+                 contention_aware: Optional[bool] = None,
+                 tail_placement: Optional[bool] = None,
                  share_encoders: bool = False,
                  bucketer: Optional[Bucketer] = None,
                  max_history: Optional[int] = 256):
@@ -65,9 +74,11 @@ class TieredEMSServe(EMSServeEngine):
             batch=BatchPolicy(bucketer=bucketer),   # None: unbucketed, as ever
             stream=None,                            # legacy: no glass partials
             placement=PlacementPolicy(
-                profile=profile, trace=trace, glass_tier=glass_tier,
+                profile=profile, trace=trace, tiers=tiers,
+                tier_traces=tier_traces, glass_tier=glass_tier,
                 edge_tier=edge_tier, hb_period=hb_period,
                 link_latency_s=link_latency_s, adaptive=adaptive,
-                force=force),
+                force=force, contention_aware=contention_aware,
+                tail_placement=tail_placement),
             share_encoders=share_encoders,
             max_history=max_history)

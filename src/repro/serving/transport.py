@@ -94,3 +94,62 @@ class TransportChannel:
     def stats(self) -> dict:
         return {"name": self.name, "msgs": self.msgs_sent,
                 "bytes": self.bytes_sent, "busy_s": self.busy_s}
+
+
+# ======================================================================
+# N-tier link fabric
+# ======================================================================
+
+@dataclass
+class MinTrace:
+    """Bandwidth of a remote<->remote path: each remote tier owns one
+    radio link to the incident-local network, so a transfer between two
+    remotes traverses both links and the slower one bottlenecks.
+    Duck-types the ``at(t)`` surface :class:`TransportChannel` needs."""
+    a: object
+    b: object
+
+    def at(self, t: float) -> float:
+        return min(self.a.at(t), self.b.at(t))
+
+
+class TierFabric:
+    """Directional transport channels between any pair of tiers.
+
+    ``traces`` maps each remote host name to the :class:`BandwidthTrace`
+    of ITS radio link; the local tier (the glasses) terminates every
+    link it participates in, so a local<->remote channel runs at the
+    remote's trace and a remote<->remote channel at the min of the two
+    (:class:`MinTrace`). Channels are created on demand and cached, so
+    per-link in-order delivery state and byte accounting live exactly
+    once per (src, dst) direction.
+    """
+
+    def __init__(self, local: str, traces: dict, *,
+                 latency_s: float = 0.005, overhead_bytes: int = 64):
+        self.local = local
+        self.traces = dict(traces)
+        self.latency_s = latency_s
+        self.overhead_bytes = overhead_bytes
+        self._channels = {}
+
+    def trace(self, src: str, dst: str):
+        remotes = [t for t in (src, dst) if t != self.local]
+        if not remotes:
+            raise ValueError("no wire between a tier and itself")
+        if len(remotes) == 1:
+            return self.traces[remotes[0]]
+        return MinTrace(self.traces[remotes[0]], self.traces[remotes[1]])
+
+    def channel(self, src: str, dst: str) -> TransportChannel:
+        key = (src, dst)
+        ch = self._channels.get(key)
+        if ch is None:
+            ch = self._channels[key] = TransportChannel(
+                self.trace(src, dst), latency_s=self.latency_s,
+                overhead_bytes=self.overhead_bytes, name=f"{src}->{dst}")
+        return ch
+
+    def stats(self) -> dict:
+        return {f"{s}->{d}": ch.stats()
+                for (s, d), ch in sorted(self._channels.items())}

@@ -1,0 +1,198 @@
+"""Fault-injection scenario tier: crash -> heartbeat-detected failover
+-> tier restart/rejoin (replica re-warm from the glass-side versioned
+cache) -> re-crash, scripted over the N-tier engine.
+
+The load-bearing claims (ISSUE 5):
+  * outputs match the monolithic ``SplitModel.full`` / subset
+    ``partial_forward`` at EVERY event, through both crashes and the
+    rejoin (placement changes the clock, never the math);
+  * the <=1-step cache-staleness invariant holds across the rejoin;
+  * ``fallback``/``rejoin``/``evicted`` counters are exact;
+  * after the dead tier rejoins, it is actually RE-SELECTED when it is
+    the fastest candidate, and mid-outage traffic fails over to the
+    next-best surviving tier (the phone), not all the way to glass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthTrace, ProfileTable, emsnet_zoo,
+                        nlos_bandwidth, split)
+from repro.core.episodes import Event
+from repro.models import emsnet as E
+from repro.serving.api import build_engine
+
+ALL = ("text", "vitals", "scene")
+TIERS = ("glass", "ph1", "edge64x")
+BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
+        "tail": 0.005, "full": 0.15}
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+def _engine(splits, params, **kw):
+    kw.setdefault("max_history", None)
+    return build_engine(
+        splits, params, kw.pop("spec", "tiered"), share_encoders=True,
+        profile=ProfileTable(base=dict(BASE)),
+        trace=BandwidthTrace.static(nlos_bandwidth(5.0)),
+        tiers=TIERS,
+        tier_traces={"ph1": BandwidthTrace.static(nlos_bandwidth(0.0))},
+        **kw)
+
+
+def _assert_parity(rec, shared, cfg, payloads, observed):
+    """Every emission equals the reference forward over its observed
+    subset — finals bit-equal to the full fused forward."""
+    assert rec.outputs is not None
+    if set(observed) == set(ALL):
+        assert rec.kind == "final"
+        want = E.forward(shared, cfg, payloads)
+    else:
+        assert rec.kind == "partial"
+        want = E.partial_forward(shared, cfg, payloads, observed)
+    for k in want:
+        np.testing.assert_allclose(rec.outputs[k], want[k], atol=1e-5)
+
+
+def test_crash_failover_rejoin_recrash_scenario(zoo_models):
+    """The full scripted lifecycle on one engine: healthy -> crash
+    mid-flight -> heartbeat-detected glass fallback -> phone takes the
+    outage traffic -> edge restarts, re-warms its replica, and is
+    re-selected -> second crash -> second failover."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params)
+    eng.inject_crash(2.1, "edge64x", rejoin_at=8.0)
+
+    script = [
+        # (modality, t_arrival, expected enc tier, fallback?)
+        ("text", 0.0, "edge64x", False),    # healthy: fastest tier wins
+        ("vitals", 1.0, "edge64x", False),  # completes before the crash
+        # dispatched at 2.0, dies in flight at 2.1 -> stalls until the
+        # missed heartbeat at 3.0, re-runs everything on glass
+        ("scene", 2.0, "glass", True),
+        ("vitals", 4.0, "ph1", False),      # outage: next-best, NOT glass
+        ("vitals", 9.0, "edge64x", False),  # rejoined and re-selected
+    ]
+    observed = []
+    for i, (m, t, tier, fb) in enumerate(script):
+        if m not in observed:
+            observed.append(m)
+        rec = eng.submit("s0", Event(i, m, t), payloads[m])
+        assert (rec.enc_tier, rec.fallback) == (tier, fb), (i, m)
+        _assert_parity(rec, shared, cfg, payloads, observed)
+    recs = eng.sessions["s0"].records
+
+    # detection stalled the fallback until the first missed heartbeat
+    assert recs[2].detect_s == pytest.approx(1.0)
+    assert recs[2].t_start >= 3.0
+    # exact counters after one crash + one rejoin
+    assert eng.fallback_count == 1 and eng.rejoin_count == 1
+    assert not eng._faults["edge64x"].dead
+
+    # the rejoin re-warmed the replica from the glass-side versioned
+    # cache: the warm shipment went over the glass->edge64x link and
+    # the replica's version map covers every live cache entry
+    versions = eng._replica_versions["edge64x"]
+    for (key, m), e in eng.cache.entries():
+        assert versions[(key, m)] == e.version
+    assert eng.fabric.channel("glass", "edge64x").bytes_sent > 0
+
+    # <=1-step staleness invariant holds across the rejoin
+    st = eng.sessions["s0"]
+    for (key, m), e in eng.cache.entries():
+        assert st.input_step[m] - e.step <= 1
+
+    # ---- re-crash the rejoined tier: second failover, exact counters
+    eng.inject_crash(10.2, "edge64x")
+    rec = eng.submit("s0", Event(5, "scene", 10.0), payloads["scene"])
+    assert rec.fallback and rec.enc_tier == "glass"
+    assert rec.detect_s == pytest.approx(1.0)      # detected at 11.0
+    _assert_parity(rec, shared, cfg, payloads, ALL)
+    rec = eng.submit("s0", Event(6, "vitals", 11.5), payloads["vitals"])
+    assert rec.enc_tier == "ph1" and not rec.fallback
+    _assert_parity(rec, shared, cfg, payloads, ALL)
+
+    assert eng.fallback_count == 2 and eng.rejoin_count == 1
+    assert eng.placement_counts() == {"glass": 2, "ph1": 2,
+                                      "edge64x": 3, "fallbacks": 2}
+    assert eng.tail_placement_counts() == {"glass": 2, "ph1": 2,
+                                           "edge64x": 3}
+
+
+def test_eviction_drops_every_tier_replica(zoo_models):
+    """Cross-incident eviction under the session cap forgets the evicted
+    session on EVERY tier's replica version map, and the evicted counter
+    is exact."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, spec="stream+tiered", max_sessions=1)
+    for i, m in enumerate(ALL):
+        eng.submit("s0", Event(i, m, float(i)), payloads[m])
+    assert any(k[0] == "s0" for vers in eng._replica_versions.values()
+               for k in vers)
+    eng.submit("s1", Event(0, "text", 20.0), payloads["text"])
+    assert eng.evicted_count == 1 and set(eng.sessions) == {"s1"}
+    assert not any(k[0] == "s0" for vers in eng._replica_versions.values()
+                   for k in vers)
+    assert ("s0", "text") not in eng.cache
+
+
+def test_rejoined_tier_wins_only_when_fastest(zoo_models):
+    """Rejoin restores eligibility, not priority: with the restarted
+    tier forced SLOW (deep queue via a busy clock), the phone keeps the
+    traffic — re-selection is a cost decision, not a flag flip."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params)
+    eng.inject_crash(0.5, "edge64x", rejoin_at=2.0)
+    rec = eng.submit("s0", Event(0, "text", 0.4), payloads["text"])
+    assert rec.fallback                       # caught in flight
+    # rejoin happens lazily at the next decision after t=2.0
+    rec = eng.submit("s0", Event(1, "vitals", 4.0), payloads["vitals"])
+    assert rec.enc_tier == "edge64x" and eng.rejoin_count == 1
+    # pile simulated work onto the rejoined tier: contention-aware
+    # decisions route around the queue
+    eng.hosts["edge64x"].free_at = 1e6
+    rec = eng.submit("s0", Event(2, "vitals", 5.0), payloads["vitals"])
+    assert rec.enc_tier == "ph1"
+
+
+def test_crash_before_any_traffic_then_rejoin(zoo_models):
+    """A tier that dies and rejoins before ever serving still re-warms
+    correctly: the first post-rejoin arrival finds a warm replica only
+    for what the glass cache holds (nothing), ships its own payload,
+    and parity holds."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params)
+    eng.inject_crash(0.1, "edge64x", rejoin_at=1.0)
+    rec = eng.submit("s0", Event(0, "text", 2.0), payloads["text"])
+    assert rec.enc_tier == "edge64x" and not rec.fallback
+    assert eng.rejoin_count == 1
+    _assert_parity(rec, shared, cfg, payloads, ("text",))
+
+
+def test_rejoin_requires_crash_and_future_time(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params)
+    eng.inject_crash(5.0, "edge64x")
+    with pytest.raises(ValueError):
+        eng.schedule_rejoin(4.0, "edge64x")    # precedes the crash
+    with pytest.raises(ValueError):
+        eng.run_arrivals({}, lambda s, e: None, rejoin_at=1.0)  # no crash

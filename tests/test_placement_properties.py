@@ -1,0 +1,165 @@
+"""Property tests (hypothesis) for the N-tier contention-aware
+placement rule (``core.offload.MultiTierPolicy``).
+
+The decision model is ``cost_k = Δt_k + queue_k + t_k(submodule)`` over
+the local host and every usable remote, so its invariants are exact at
+the estimate level (anything beyond them — per-message link latency,
+in-order head-of-line blocking, replica-sync bytes — is transport
+accounting the rule deliberately does not see):
+
+  * the chosen placement never loses to all-local;
+  * decisions are monotone in bandwidth (offloading is upward-closed)
+    and in queue depth (a deeper queue never attracts work);
+  * a tier with infinite queueing delay is never chosen;
+  * per-submodule force pins exactly what it names.
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
+                                MultiTierPolicy, ProfileTable)
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+REMOTES = ("ph1", "edge4c", "edge64x")
+LOCAL = "glass"
+
+bw_st = st.floats(min_value=1e3, max_value=1e9)
+t_st = st.floats(min_value=1e-4, max_value=10.0)
+q_st = st.floats(min_value=0.0, max_value=30.0)
+pay_st = st.integers(min_value=1, max_value=10_000_000)
+
+
+def _policy(base_enc, base_tail, bws, **kw):
+    prof = ProfileTable(base={"enc:m": base_enc, "tail": base_tail})
+    monitors = {n: HeartbeatMonitor(BandwidthTrace.static(bw))
+                for n, bw in bws.items()}
+    return MultiTierPolicy(prof, monitors, local=LOCAL,
+                           tier_of={LOCAL: LOCAL, **{n: n for n in bws}},
+                           **kw)
+
+
+@st.composite
+def scenarios(draw, n_remotes=len(REMOTES)):
+    remotes = REMOTES[:draw(st.integers(1, n_remotes))]
+    bws = {n: draw(bw_st) for n in remotes}
+    queues = {n: draw(q_st) for n in (LOCAL, *remotes)}
+    return (draw(t_st), draw(t_st), bws, queues, draw(pay_st))
+
+
+@given(scenarios())
+@settings(**SETTINGS)
+def test_chosen_placement_never_loses_to_all_local(sc):
+    """argmin construction: the winner's estimated cost is <= the local
+    host's for the SAME arrival — adaptive placement can only tie or
+    beat all-local, up to the transport accounting the rule does not
+    model."""
+    base_enc, base_tail, bws, queues, payload = sc
+    pol = _policy(base_enc, base_tail, bws)
+    d = pol.decide("enc:m", payload, 0.0, queues=queues)
+    assert d.estimates[d.tier].cost <= d.estimates[LOCAL].cost
+    # and the decision is deterministic for identical inputs
+    assert pol.decide("enc:m", payload, 0.0, queues=queues).tier == d.tier
+
+
+@given(scenarios(), st.floats(min_value=1.0, max_value=1e4))
+@settings(**SETTINGS)
+def test_offloading_monotone_in_bandwidth(sc, scale):
+    """Scaling every link's bandwidth UP never pulls work back to the
+    local host: the offloaded set is upward-closed in bandwidth."""
+    base_enc, base_tail, bws, queues, payload = sc
+    d_lo = _policy(base_enc, base_tail, bws).decide(
+        "enc:m", payload, 0.0, queues=queues)
+    d_hi = _policy(base_enc, base_tail,
+                   {n: bw * scale for n, bw in bws.items()}).decide(
+        "enc:m", payload, 0.0, queues=queues)
+    if d_lo.tier != LOCAL:
+        assert d_hi.tier != LOCAL
+
+
+@given(scenarios(), st.floats(min_value=1e-3, max_value=100.0))
+@settings(**SETTINGS)
+def test_decision_monotone_in_queue_depth(sc, extra):
+    """Deepening a LOSER's queue never changes the winner; deepening
+    the WINNER's queue past every alternative evicts it — queues repel
+    work, never attract it."""
+    base_enc, base_tail, bws, queues, payload = sc
+    pol = _policy(base_enc, base_tail, bws)
+    d = pol.decide("enc:m", payload, 0.0, queues=queues)
+    for loser in d.estimates:
+        if loser == d.tier:
+            continue
+        deeper = dict(queues)
+        deeper[loser] = deeper.get(loser, 0.0) + extra
+        assert pol.decide("enc:m", payload, 0.0,
+                          queues=deeper).tier == d.tier
+    if d.tier != LOCAL:
+        worst = dict(queues)
+        worst[d.tier] = max(e.cost for e in d.estimates.values()) + extra
+        assert pol.decide("enc:m", payload, 0.0,
+                          queues=worst).tier != d.tier
+
+
+@given(scenarios())
+@settings(**SETTINGS)
+def test_infinite_queue_tier_never_chosen(sc):
+    base_enc, base_tail, bws, queues, payload = sc
+    pol = _policy(base_enc, base_tail, bws)
+    for jammed in bws:
+        q = dict(queues)
+        q[jammed] = math.inf
+        d = pol.decide("enc:m", payload, 0.0, queues=q)
+        assert d.tier != jammed
+        dt = pol.decide_tail(payload, payload, LOCAL, 0.0, queues=q)
+        assert dt.tier != jammed
+
+
+@given(scenarios())
+@settings(**SETTINGS)
+def test_unavailable_tier_never_chosen(sc):
+    """A crashed tier (absent from ``available``) is not a candidate —
+    the fault path's availability filter is honored by construction."""
+    base_enc, base_tail, bws, queues, payload = sc
+    pol = _policy(base_enc, base_tail, bws)
+    dead = sorted(bws)[0]
+    alive = [n for n in bws if n != dead]
+    d = pol.decide("enc:m", payload, 0.0, queues=queues, available=alive)
+    assert d.tier != dead
+    assert dead not in d.estimates
+
+
+@given(scenarios())
+@settings(**SETTINGS)
+def test_tail_placement_never_loses_to_local_tail(sc):
+    base_enc, base_tail, bws, queues, payload = sc
+    pol = _policy(base_enc, base_tail, bws)
+    for enc_tier in (LOCAL, *bws):
+        d = pol.decide_tail(payload, payload // 2, enc_tier, 0.0,
+                            queues=queues)
+        assert d.estimates[d.tier].cost <= d.estimates[LOCAL].cost
+
+
+@given(scenarios())
+@settings(**SETTINGS)
+def test_per_submodule_force_pins_exactly_what_it_names(sc):
+    base_enc, base_tail, bws, queues, payload = sc
+    target = sorted(bws)[-1]
+    pol = _policy(base_enc, base_tail, bws,
+                  force={"enc:m": target, "tail": LOCAL})
+    assert pol.decide("enc:m", payload, 0.0,
+                      queues=queues).tier == target
+    assert pol.decide_tail(payload, payload, target, 0.0,
+                           queues=queues).tier == LOCAL
+    # a forced-but-dead tier falls back to the local host
+    assert pol.decide("enc:m", payload, 0.0, queues=queues,
+                      available=[]).tier == LOCAL
+
+
+def test_force_rejects_unknown_tier():
+    with pytest.raises(ValueError):
+        _policy(0.1, 0.01, {"ph1": 1e6}, force="warp9")

@@ -202,6 +202,94 @@ def test_edge_replica_sync_only_ships_stale_features(zoo_models):
     assert shipped == vitals_declared + eng.uplink.overhead_bytes
 
 
+# ------------------------------------------- N-tier exhaustive placement
+
+def test_exhaustive_per_submodule_placements_match_full_atol0(zoo_models):
+    """EVERY per-submodule tier assignment over a 3-tier config — all
+    3^4 (enc:text, enc:vitals, enc:scene, tail) placements — lands on
+    the forced hosts and produces BIT-IDENTICAL outputs: the final
+    fused prediction equals the monolithic ``SplitModel.full`` at
+    atol 0, and every intermediate row is bitwise equal across all 81
+    assignments. Placement changes the clock, never the math."""
+    import itertools
+    cfg, splits, shared, params, payloads = zoo_models
+    tiers = ("glass", "ph1", "edge64x")
+    submods = splits["text+vitals+scene"].submodules()
+    assert submods == ("enc:text", "enc:vitals", "enc:scene", "tail")
+    want = splits["text+vitals+scene"].full(shared, payloads)
+    ref_rows = None
+    for combo in itertools.product(tiers, repeat=len(submods)):
+        force = dict(zip(submods, combo))
+        eng = _engine(splits, params, tiers=tiers, force=force,
+                      trace=BandwidthTrace.static(nlos_bandwidth(5.0)))
+        rows = []
+        for ev in _episode():
+            rec = eng.submit("s0", ev, payloads[ev.modality])
+            assert rec.enc_tier == force[f"enc:{ev.modality}"], combo
+            assert rec.outputs is not None
+            assert rec.tail_tier == force["tail"], combo
+            rows.append(rec.outputs)
+        final = eng.sessions["s0"].records[-1]
+        assert final.kind == "final"
+        for k in want:
+            np.testing.assert_array_equal(final.outputs[k], want[k],
+                                          err_msg=str(combo))
+        if ref_rows is None:
+            ref_rows = rows
+        else:
+            for got, ref in zip(rows, ref_rows):
+                for k in ref:
+                    np.testing.assert_array_equal(got[k], ref[k],
+                                                  err_msg=str(combo))
+
+
+def test_contention_aware_decisions_spread_sessions(zoo_models):
+    """With two remotes of similar speed, queue-aware decisions fan
+    concurrent same-instant arrivals across both instead of stampeding
+    the faster one; the contention-blind rule sends everything to the
+    single argmin tier."""
+    cfg, splits, shared, params, payloads = zoo_models
+    # custom factor table: phone nearly as fast as the edge box, so a
+    # single queued event flips the argmin
+    profile = ProfileTable(
+        base=dict(BASE),
+        factors={"glass": 40.0, "ph1": 1.2, "edge4c": 2.7,
+                 "edge64x": 1.0})
+
+    def run(contention_aware):
+        eng = TieredEMSServe(
+            splits, params, share_encoders=True, profile=profile,
+            trace=BandwidthTrace.static(1e9),
+            tiers=("glass", "ph1", "edge64x"),
+            contention_aware=contention_aware)
+        for i in range(4):
+            eng.submit(f"s{i}", Event(0, "text", 0.0), payloads["text"])
+        return eng
+
+    aware = run(True)
+    assert aware.place_counts["ph1"] > 0 \
+        and aware.place_counts["edge64x"] > 0
+    blind = run(False)
+    assert blind.place_counts["edge64x"] == 4
+    # spreading helped: last emission lands earlier than the stampede's
+    assert aware.makespan_s() <= blind.makespan_s()
+
+
+def test_legacy_two_tier_surface_is_unchanged(zoo_models):
+    """The historical attribute surface still works on the legacy pair:
+    ``edge``/``uplink``/``downlink``/``crash_at`` map onto the (single)
+    remote, and N-tier capabilities stay off by default there."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, bw_m=0.0)
+    assert not eng.contention_aware and not eng.tail_placement
+    assert eng.edge.name == "edge" and eng.glass.name == "glass"
+    eng.inject_edge_crash(1.5)
+    assert eng.crash_at == 1.5 and eng.detect_at == 2.0
+    assert not eng.edge_known_dead
+    eng.submit("s0", Event(0, "text", 2.5), payloads["text"])
+    assert eng.edge_known_dead
+
+
 # ------------------------------------------------------------- transport
 
 def test_transport_in_order_delivery_under_bandwidth_dip():

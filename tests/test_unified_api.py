@@ -326,6 +326,36 @@ def test_stream_tiered_composition_glass_partials(zoo_models):
     assert eng.time_to_first_prediction("s0") is not None
 
 
+def test_glass_partial_emitted_for_local_enc_remote_tail_split(zoo_models):
+    """Per-submodule tail placement composes with stream: even when the
+    ENCODER stays home, a remotely-placed tail is an offload round trip
+    the EMT should not wait behind — a provisional partial from cached
+    features is emitted, matching ``partial_forward`` on the
+    previously-observed subset, and the refreshed final is unchanged."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(
+        splits, params, "stream+tiered", share_encoders=True,
+        profile=ProfileTable(base=dict(BASE)),
+        trace=BandwidthTrace.static(nlos_bandwidth(0.0)),
+        tiers=("glass", "ph1", "edge64x"),
+        force={"enc:text": "glass", "enc:vitals": "glass",
+               "enc:scene": "glass", "tail": "ph1"})
+    recs = [eng.submit("s0", Event(i, m, float(i)), payloads[m])
+            for i, m in enumerate(ALL)]
+    assert all(r.enc_tier == "glass" and r.tail_tier == "ph1"
+               for r in recs)
+    assert recs[0].glass_partial is None       # nothing cached yet
+    for i in (1, 2):
+        gp = recs[i].glass_partial
+        assert gp is not None and gp.kind == "partial"
+        assert gp.modalities == ALL[:i]
+        _assert_close(gp.outputs,
+                      E.partial_forward(shared, cfg, payloads, ALL[:i]))
+        assert gp.t_emit < recs[i].t_emit      # lands before the refresh
+    assert recs[-1].kind == "final"
+    _assert_close(recs[-1].outputs, E.forward(shared, cfg, payloads))
+
+
 def test_stream_tiered_staleness_invariant_still_asserted(zoo_models):
     """The glass-partial path reads through the live staleness assert:
     an artificially outdated cache entry raises StalenessError instead
