@@ -51,7 +51,14 @@ Acceptance (checked by ``--smoke``):
     post-rejoin mean latency recovers to within 15% of a no-crash run
     of the same workload (window-for-window — the modality mix differs
     across windows), the rejoined tier is re-selected, finals stay
-    bit-equal.
+    bit-equal;
+  * speculation: under mobility + mid-incident crash, speculative dual
+    placement (cancel-on-commit racing) + mid-flight re-dispatch beats
+    the PR 5 glass-failover baseline on p99 per-arrival latency, with
+    ZERO duplicate cache commits and bit-equal finals;
+  * chaos: a seeded crash/rejoin schedule over both remote tiers
+    replays with bit-equal finals, <=1-step staleness, zero
+    duplicate/stale commits, and >= 1 completed rejoin cycle.
 
 -> artifacts/BENCH_tiered.json
 """
@@ -124,13 +131,15 @@ def _traces(quick):
 
 
 def _run(splits, params, profile_table, trace, eps, payloads, *,
-         force=None, crash_at=None, rejoin_at=None, spec="tiered", **kw):
+         force=None, crash_at=None, rejoin_at=None, schedule=None,
+         spec="tiered", **kw):
     from repro.serving.api import build_engine
     eng = build_engine(splits, params, spec, profile=profile_table,
                        trace=trace, share_encoders=True, force=force,
                        max_history=None, **kw)
     eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
-                     crash_at=crash_at, rejoin_at=rejoin_at)
+                     crash_at=crash_at, rejoin_at=rejoin_at,
+                     schedule=schedule)
     return eng
 
 
@@ -403,6 +412,132 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
               f"post={wins['post_rejoin']['mean_ms']:.1f}ms;"
               f"rejoins={rj.rejoin_count}")
 
+    # ---- speculative dual placement + mid-flight re-dispatch: the
+    # robustness rung over PR 5's glass-failover. Same mobility walk +
+    # mid-incident edge crash, two engines over the identical workload:
+    #   baseline — PR 5 behavior (detect stall, lost flights re-run
+    #              on-glass);
+    #   robust   — deadline-pressured arrivals race glass vs the best
+    #              remote (cancel-on-commit), and flights lost to the
+    #              crash re-dispatch to the next-best surviving remote.
+    # Gate: robust p99 per-arrival latency strictly beats baseline,
+    # with ZERO duplicate cache commits and bit-equal finals — the
+    # hedge may never pay in correctness.
+    from repro.core.offload import SpeculationPolicy
+    spec_pol = SpeculationPolicy(deadline_s=0.35, margin_s=0.05)
+    walk = list(np.linspace(0, 30, 11)) + list(np.linspace(30, 0, 11))
+    mob_tr = BandwidthTrace.walk(walk, nlos_bandwidth, period=1.0)
+    offl2 = [t for t, _sid, ev in merge_arrivals(eps_long)
+             if ev.modality in ("text", "vitals")]
+    tc2 = float(offl2[len(offl2) // 2] - 1e-6 if offl2
+                else horizon(eps_long) / 2)
+    mk_sp = lambda **kw: _run(  # noqa: E731
+        splits, params, table, mob_tr, eps_long, payloads, tiers=TIERS3,
+        tier_traces={"ph1": ph_near}, crash_at=tc2, **kw)
+    base_fo = mk_sp()                                   # PR 5 baseline
+    rob = mk_sp(speculation=spec_pol, redispatch=True)
+    p99 = lambda e: float(np.percentile(  # noqa: E731
+        [r.latency_s for r in e.records], 99) * 1e3)
+    fb_ms = lambda e: (float(np.mean(  # noqa: E731
+        [r.latency_s for r in e.records if r.fallback]) * 1e3)
+        if any(r.fallback for r in e.records) else 0.0)
+
+    # race win-rates per bandwidth regime (no crash): how often does
+    # each side of the hedge actually win?
+    win_rates = {}
+    for rname, rtr in (("static_5m",
+                        BandwidthTrace.static(nlos_bandwidth(5.0))),
+                       ("static_30m",
+                        BandwidthTrace.static(nlos_bandwidth(30.0))),
+                       ("mobility", mob_tr)):
+        se = _run(splits, params, table, rtr, zoo_eps, payloads,
+                  tiers=TIERS3, tier_traces={"ph1": ph_near},
+                  speculation=spec_pol)
+        win_rates[rname] = {
+            "races": se.spec_count,
+            "wins": dict(se.spec_wins),
+            "glass_win_rate": (se.spec_wins.get("glass", 0)
+                               / se.spec_count if se.spec_count else 0.0),
+            "cancelled_msgs": se.fabric.cancelled_msgs(),
+            "duplicate_commits": se.cache.duplicate_commits,
+        }
+
+    ss = rob.speculation_stats()
+    result["speculation"] = {
+        "regime": "mobility", "crash_at_s": tc2,
+        "deadline_ms": spec_pol.deadline_s * 1e3,
+        "margin_ms": spec_pol.margin_s * 1e3,
+        "baseline_failover": {
+            "p99_ms": p99(base_fo), "fallbacks": base_fo.fallback_count,
+            "fallback_mean_ms": fb_ms(base_fo), **_summary(base_fo)},
+        "robust": {
+            "p99_ms": p99(rob), "fallbacks": rob.fallback_count,
+            "fallback_mean_ms": fb_ms(rob), "races": rob.spec_count,
+            "race_wins": dict(rob.spec_wins),
+            "crash_saves": rob.spec_crash_saves,
+            "redispatches": rob.redispatch_count,
+            "cancelled_msgs": ss["cancelled_msgs"],
+            "duplicate_commits": ss["duplicate_commits"],
+            "stale_commits": ss["stale_commits"], **_summary(rob)},
+        "race_win_rates": win_rates,
+        "finals_match_full_atol0": _finals_match_full(rob, eps_long,
+                                                      want),
+    }
+    result["passed_speculation_beats_failover"] = bool(
+        p99(rob) < p99(base_fo)
+        and ss["duplicate_commits"] == 0 and ss["stale_commits"] == 0
+        and result["speculation"]["finals_match_full_atol0"])
+    C.csv_row("tiered_speculation", rob.total_latency_s() * 1e6,
+              f"p99={p99(rob):.1f}ms;base_p99={p99(base_fo):.1f}ms;"
+              f"races={rob.spec_count};redispatch={rob.redispatch_count}")
+
+    # ---- chaos schedule: seeded repeated crash/rejoin cycles over BOTH
+    # remote tiers, replayed through the same engine. Gate: every final
+    # stays bit-equal, the <=1-step staleness invariant holds at end
+    # state, zero duplicate/stale commits, and the schedule actually
+    # cycled (>= 1 rejoin).
+    from repro.serving.chaos import chaos_schedule
+    sched = chaos_schedule(seed + 13, horizon=span,
+                           tiers=("ph1", "edge64x"),
+                           mean_up_s=0.35 * span, mean_down_s=0.15 * span,
+                           min_up_s=0.1 * span, min_down_s=0.05 * span)
+    chaos_eng = _run(splits, params, table,
+                     BandwidthTrace.static(nlos_bandwidth(5.0)),
+                     eps_long, payloads, tiers=TIERS3,
+                     tier_traces={"ph1": ph_near}, schedule=sched,
+                     speculation=spec_pol, redispatch=True)
+    stale_ok = True
+    for sid in eps_long:
+        st = chaos_eng.sessions[sid]
+        for m, step in st.input_step.items():
+            e = chaos_eng.cache.peek(sid, m)
+            if e is None or step - e.step > 1:
+                stale_ok = False
+    css = chaos_eng.speculation_stats()
+    result["chaos"] = {
+        "seed": seed + 13, "events": len(sched),
+        "schedule": [{"tier": e.tier, "crash_at": e.crash_at,
+                      "rejoin_at": e.rejoin_at} for e in sched],
+        "rejoins": chaos_eng.rejoin_count,
+        "fallbacks": chaos_eng.fallback_count,
+        "redispatches": chaos_eng.redispatch_count,
+        "races": chaos_eng.spec_count,
+        "duplicate_commits": css["duplicate_commits"],
+        "stale_commits": css["stale_commits"],
+        "staleness_le_1": bool(stale_ok),
+        "finals_match_full_atol0": _finals_match_full(chaos_eng,
+                                                      eps_long, want),
+        **_summary(chaos_eng),
+    }
+    result["passed_chaos"] = bool(
+        result["chaos"]["finals_match_full_atol0"] and stale_ok
+        and css["duplicate_commits"] == 0 and css["stale_commits"] == 0
+        and chaos_eng.rejoin_count >= 1)
+    C.csv_row("tiered_chaos", chaos_eng.total_latency_s() * 1e6,
+              f"events={len(sched)};rejoins={chaos_eng.rejoin_count};"
+              f"redispatch={chaos_eng.redispatch_count};"
+              f"parity={result['chaos']['finals_match_full_atol0']}")
+
     # ---- acceptance
     paper_speedups = {r: result["regimes"][r]["speedup_adaptive_vs_glass"]
                       for r in PAPER_REGIMES if r in result["regimes"]}
@@ -439,7 +574,9 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
                               "passed_outage_recovery",
                               "passed_stream_composition",
                               "passed_3tier_beats_static",
-                              "passed_rejoin_recovery")
+                              "passed_rejoin_recovery",
+                              "passed_speculation_beats_failover",
+                              "passed_chaos")
                   if not result[k]]
         if failed:
             raise SystemExit(f"tiered acceptance failed: {failed}; "

@@ -6,7 +6,16 @@ Invariants (paper §4.2.3, fault tolerance):
     ("the cache on the smart glasses is never outdated by more than one
     step" — the edge returns the cache with every result);
   * entries carry the tier that computed them, so the fault-tolerance
-    path can tell which features survive an edge crash.
+    path can tell which features survive an edge crash;
+  * commits are idempotent and monotone in the step clock: a second
+    commit of the same (session, modality, step) is a structural no-op
+    (the version does NOT bump — a duplicate is the same feature, since
+    placement never changes the math), and a commit at an OLDER step
+    than the stored entry is refused outright. Speculative dual
+    placement races two tiers on the same submodule and commits
+    whichever returns first; these two rules are what make a losing
+    flight's late commit harmless — it can never clobber a newer
+    version or regress staleness.
 """
 from __future__ import annotations
 
@@ -33,14 +42,32 @@ class FeatureCache:
         self._store: Dict[Tuple[str, str], CacheEntry] = {}
         self.hits = 0
         self.misses = 0
+        self.duplicate_commits = 0    # same-step re-commits (no-ops)
+        self.stale_commits = 0        # older-step late commits (refused)
 
     def put(self, session: str, modality: str, feature, *, step: int,
-            tier: str = "glass"):
+            tier: str = "glass") -> bool:
+        """Commit a feature; returns True iff the entry changed.
+
+        Commits are idempotent and monotone: re-committing the step the
+        entry already holds is a structural no-op (same step = same
+        input = same feature — the version does NOT bump, so tier
+        replicas never re-ship), and committing an older step than the
+        stored entry is refused — a losing speculative flight or a
+        crash-delayed straggler can never regress staleness."""
         key = (session, modality)
         prev = self._store.get(key)
+        if prev is not None:
+            if step < prev.step:
+                self.stale_commits += 1
+                return False
+            if step == prev.step:
+                self.duplicate_commits += 1
+                return False
         self._store[key] = CacheEntry(
             feature=feature, step=step, tier=tier, modality=modality,
             version=(prev.version + 1) if prev else 0)
+        return True
 
     def get(self, session: str, modality: str, *,
             input_step: Optional[int] = None):

@@ -142,6 +142,28 @@ class AdaptiveOffloadPolicy:
 # ======================================================================
 
 @dataclass(frozen=True)
+class SpeculationPolicy:
+    """When to hedge a placement with a speculative dual dispatch.
+
+    ``deadline_s`` is the per-arrival serving-latency budget (the EMT
+    needs the prediction within this window of the datum arriving);
+    ``margin_s`` is the pressure threshold: when the chosen placement's
+    *estimated* completion leaves less than ``margin_s`` of slack before
+    the deadline, the estimate can no longer be trusted to hold (the
+    heartbeat-quantized bandwidth it is built on lags the wire), so the
+    runtime dispatches the submodule on the local tier AND the best
+    remote, commits whichever returns first, and cancels the loser."""
+    deadline_s: float
+    margin_s: float = 0.0
+
+    def should_speculate(self, est_cost_s: float,
+                         lateness_s: float = 0.0) -> bool:
+        """Margin = deadline - time already burned - estimated cost;
+        speculate when it dips below the configured threshold."""
+        return (self.deadline_s - lateness_s - est_cost_s) < self.margin_s
+
+
+@dataclass(frozen=True)
 class TierEstimate:
     """One candidate tier's cost breakdown for one submodule placement."""
     tier: str                  # host name
@@ -160,6 +182,15 @@ class TierDecision:
     tier: str                            # chosen host name
     local: str                           # the always-available local host
     estimates: Dict[str, TierEstimate]   # every candidate evaluated
+    speculate: bool = False              # deadline margin too thin: race
+    margin_s: float = float("inf")       # slack the estimate left
+
+    @property
+    def best_remote(self) -> "str | None":
+        """Name of the cheapest remote candidate (the speculation
+        partner when the argmin picked the local tier)."""
+        e = self._remote
+        return e.tier if e is not None else None
 
     # ---- legacy 2-tier views (Decision compatibility)
     @property
@@ -202,13 +233,21 @@ class MultiTierPolicy:
     a ``{submodule: host}`` dict pins per submodule (unlisted submodules
     stay adaptive). A forced tier that is currently unavailable falls
     back to the local host.
+
+    ``speculation`` (a :class:`SpeculationPolicy`) arms the hedging
+    rung: a decision whose estimated completion leaves less than the
+    configured margin before the deadline is marked ``speculate`` — the
+    engine then dispatches the submodule on the local tier AND the best
+    remote and commits whichever returns first. Forced and non-adaptive
+    decisions never speculate (ablations must stay pinned).
     """
 
     def __init__(self, profile: ProfileTable,
                  monitors: Dict[str, HeartbeatMonitor], *,
                  local: str, tier_of: Dict[str, str],
                  adaptive: bool = True,
-                 force: "str | Dict[str, str] | None" = None):
+                 force: "str | Dict[str, str] | None" = None,
+                 speculation: "SpeculationPolicy | None" = None):
         self.profile = profile
         self.monitors = monitors            # remote host name -> its link
         self.local = local
@@ -216,6 +255,7 @@ class MultiTierPolicy:
         self.remote_names = [n for n in tier_of if n != local]
         self.adaptive = adaptive
         self.force = force
+        self.speculation = speculation
         names = set(tier_of)
         forced = (force.values() if isinstance(force, dict)
                   else [force] if force else [])
@@ -254,11 +294,13 @@ class MultiTierPolicy:
 
     def decide(self, submodule: str, payload_bytes: int, now: float, *,
                queues: "Dict[str, float] | None" = None,
-               available=None) -> TierDecision:
+               available=None, lateness_s: float = 0.0) -> TierDecision:
         """Place one submodule whose raw inputs currently sit on the
         local tier. ``available`` restricts the remote candidates (a
         crashed tier is not a candidate); ``queues`` carries each host's
-        current queueing delay (omit for the contention-blind rule)."""
+        current queueing delay (omit for the contention-blind rule);
+        ``lateness_s`` is serving time already burned against this
+        arrival's deadline (feeds the speculation margin)."""
         q = queues or {}
         remotes = (self.remote_names if available is None
                    else [n for n in self.remote_names if n in available])
@@ -272,9 +314,16 @@ class MultiTierPolicy:
                 self.profile.time(submodule, self.tier_of[n]))
         # tie-break toward local: the legacy rule offloads only on a
         # STRICT win (dt + te < tg)
-        return TierDecision(tier=self._pick(submodule, est,
-                                            prefer=self.local),
-                            local=self.local, estimates=est)
+        pick = self._pick(submodule, est, prefer=self.local)
+        spec, margin = False, float("inf")
+        if (self.speculation is not None and self.adaptive
+                and self._forced(submodule) is None and remotes):
+            margin = (self.speculation.deadline_s - lateness_s
+                      - est[pick].cost)
+            spec = self.speculation.should_speculate(est[pick].cost,
+                                                     lateness_s)
+        return TierDecision(tier=pick, local=self.local, estimates=est,
+                            speculate=spec, margin_s=margin)
 
     def decide_tail(self, feat_bytes: int, out_bytes: int, enc_tier: str,
                     now: float, *, queues: "Dict[str, float] | None" = None,

@@ -178,8 +178,50 @@ def serve_unified(args):
         raise SystemExit("--deadline-ms requires a stream spec")
     if args.wall_clock and not (stream or tiered):
         raise SystemExit("--wall-clock requires a stream or tiered spec")
+    if (args.speculate or args.redispatch) and not tiered:
+        raise SystemExit("--speculate/--redispatch require a tiered spec")
+    if args.chaos_seed >= 0 and not tiered:
+        raise SystemExit("--chaos-seed requires a tiered spec")
+    if args.chaos_seed >= 0 and args.outage_at >= 0:
+        raise SystemExit("--chaos-seed conflicts with --outage-at; "
+                         "pick one fault schedule")
+
+    # the fault schedule is validated against the EPISODES (cheap to
+    # build) before any model/profiling work happens
+    eps = (scenario_episodes(n, args.scenario) if tiered or stream
+           else None)
+    chaos = None
+    if tiered:
+        from repro.core import horizon
+        span = horizon(eps)
+        if args.outage_at >= 0:
+            if args.outage_at > span:
+                raise SystemExit(
+                    f"--outage-at {args.outage_at:g} is beyond the "
+                    f"episode horizon ({span:.2f}s): the crash would "
+                    f"never be observed")
+            if args.rejoin_at >= 0 and args.rejoin_at <= args.outage_at:
+                raise SystemExit(
+                    f"--rejoin-at {args.rejoin_at:g} must be strictly "
+                    f"after --outage-at {args.outage_at:g}")
+        if args.chaos_seed >= 0:
+            if not args.tiers:
+                raise SystemExit("--chaos-seed needs --tiers (the "
+                                 "schedule spans the remote tiers)")
+            from repro.serving.chaos import chaos_schedule
+            remote = tuple(t.strip() for t in args.tiers.split(",")
+                           if t.strip())[1:]
+            chaos = chaos_schedule(args.chaos_seed, horizon=span,
+                                   tiers=remote)
 
     kw = {}
+    if tiered and args.speculate:
+        from repro.core.offload import SpeculationPolicy
+        kw["speculation"] = SpeculationPolicy(
+            deadline_s=args.spec_deadline_ms / 1e3,
+            margin_s=args.spec_margin_ms / 1e3)
+    if tiered and args.redispatch:
+        kw["redispatch"] = True
     if tiered or stream:
         splits, params = build_zoo(cfg)          # one shared pytree
         kw["share_encoders"] = True
@@ -220,19 +262,39 @@ def serve_unified(args):
                        **kw)
 
     if tiered:
-        eps = scenario_episodes(n, args.scenario)
         if args.outage_at >= 0:
             eng.inject_crash(args.outage_at,
                              rejoin_at=(args.rejoin_at
                                         if args.rejoin_at >= 0 else None))
+            print(f"fault schedule: crash {eng._primary} "
+                  f"@{args.outage_at:.2f}s, detect @{eng.detect_at:.2f}s"
+                  + (f", rejoin @{args.rejoin_at:.2f}s"
+                     if args.rejoin_at >= 0 else " (no restart)"))
+        if chaos is not None:
+            eng.inject_schedule(chaos)
+            print(f"fault schedule: chaos seed {args.chaos_seed}, "
+                  f"{len(chaos)} crash/rejoin cycles")
+            for e in chaos:
+                rj = (f"rejoin @{e.rejoin_at:6.2f}s"
+                      if e.rejoin_at is not None else "no restart")
+                print(f"  crash {e.tier:8s} @{e.crash_at:6.2f}s, {rj}")
         if args.wall_clock:
             from repro.serving.event_loop import WallClockDriver
             WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
         else:
             eng.run_arrivals(eps, payload_fn)
         _print_tiered(eng, n)
+        if args.speculate or args.redispatch:
+            ss = eng.speculation_stats()
+            wins = " / ".join(f"{v} {t}" for t, v in ss["wins"].items()
+                              if v)
+            print(f"speculation: {ss['races']} races "
+                  f"({wins or 'no wins'}), "
+                  f"{ss['crash_saves']} crash saves, "
+                  f"{ss['redispatches']} re-dispatches, "
+                  f"{ss['cancelled_msgs']} cancelled transfers, "
+                  f"{ss['duplicate_commits']} duplicate commits")
     elif stream:
-        eps = scenario_episodes(n, args.scenario)
         if args.wall_clock:
             from repro.serving.event_loop import WallClockDriver
             WallClockDriver(eng, speed=args.speed).run(eps, payload_fn)
@@ -315,6 +377,23 @@ def main():
                          "from core.offload.TIER_FACTORS, local first "
                          "(e.g. glass,ph1,edge64x); enables contention-"
                          "aware decisions and per-submodule tail placement")
+    ap.add_argument("--speculate", action="store_true",
+                    help="tiered spec: arm speculative dual placement — "
+                         "deadline-pressured arrivals race glass against "
+                         "the best remote (cancel-on-commit)")
+    ap.add_argument("--spec-deadline-ms", type=float, default=350.0,
+                    help="--speculate: per-arrival serving deadline")
+    ap.add_argument("--spec-margin-ms", type=float, default=50.0,
+                    help="--speculate: race when the estimated slack "
+                         "before the deadline dips below this")
+    ap.add_argument("--redispatch", action="store_true",
+                    help="tiered spec: re-aim a flight lost to a tier "
+                         "crash at the next-best surviving remote "
+                         "instead of always re-running on glass")
+    ap.add_argument("--chaos-seed", type=int, default=-1, metavar="SEED",
+                    help="tiered spec with --tiers: seeded random "
+                         "crash/rejoin schedule over the remote tiers "
+                         "(repeated crash->re-dispatch->rejoin cycles)")
     ap.add_argument("--wall-clock", action="store_true",
                     help="stream/tiered specs: replay arrivals and pump "
                          "deadline flushes from a monotonic clock")

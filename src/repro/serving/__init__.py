@@ -22,6 +22,22 @@ Policies compose: ``build_engine(models, params, "stream+tiered", ...)``
 streams on-glass provisional partials while the edge computes finals —
 a regime none of the pre-unification sibling runtimes could express.
 
+Cancel-on-commit speculation (``PlacementPolicy.speculation``): when a
+``core.offload.SpeculationPolicy`` judges the deadline margin thin, the
+engine races the arrival on glass AND the best remote simultaneously
+and commits whichever finishes first — exactly once. The loser is
+cancelled *at the commit instant*: an undelivered uplink is recalled
+from the wire (``TransportChannel.cancel`` — a cancelled flight never
+delivers, the in-order frontier rolls back, the bytes are audited), an
+un-run remote booking is released from its host clock
+(``TierHost.release``), and the duplicate-safe ``FeatureCache.put``
+refuses any straggler commit at the same or an older step. A remote
+crash mid-race is absorbed by the glass racer with no heartbeat stall.
+``PlacementPolicy.redispatch`` re-aims flights lost to a tier crash at
+the best surviving remote; ``chaos`` generates seeded, validated
+crash/rejoin schedules that ``inject_schedule`` replays. All of it
+defaults OFF — historical timelines never race.
+
 Historical constructors remain as thin shims over the same engine:
 
   * ``batch_engine.BatchedEMSServe`` — the ``"batch"`` construction;
@@ -45,6 +61,7 @@ from .api import (Arrival, BatchPolicy, EMSServeEngine,  # noqa: F401
                   SessionView, StreamPolicy, TieredRecord, TierHost,
                   build_engine, parse_spec)
 from .batch_engine import BatchedEMSServe, SessionState  # noqa: F401
+from .chaos import FaultEvent, chaos_schedule, validate_schedule  # noqa: F401
 from .event_loop import LoopStats, WallClockDriver  # noqa: F401
 from .stream_engine import (StreamFlushReport,  # noqa: F401
                             StreamingEMSServe, StreamSession)

@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import math
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -77,14 +77,16 @@ from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
 from repro.core.episodes import Event, merge_arrivals
 from repro.core.feature_cache import FeatureCache
 from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
-                                MultiTierPolicy, ProfileTable, TierDecision)
+                                MultiTierPolicy, ProfileTable, TierDecision,
+                                SpeculationPolicy)
 from repro.core.splitter import SplitModel, select_model
 from repro.serving.transport import TierFabric, payload_nbytes
 
 __all__ = [
     "Arrival", "Prediction", "FlushReport", "SessionView", "TieredRecord",
     "TierHost", "BatchPolicy", "StreamPolicy", "PlacementPolicy",
-    "EngineSpec", "EMSServeEngine", "build_engine", "parse_spec",
+    "SpeculationPolicy", "EngineSpec", "EMSServeEngine", "build_engine",
+    "parse_spec",
 ]
 
 
@@ -198,6 +200,19 @@ class TierHost:
         self.calls += 1
         return start, done
 
+    def release(self, start: float, done: float, t: float):
+        """Unwind the un-run tail of the MOST RECENT booking: a
+        speculative racer cancelled at commit instant ``t`` frees the
+        host from ``max(start, t)`` on (cancel-on-commit — the loser
+        stops computing the moment the winner's result lands). A no-op
+        if something was booked after, so only the latest racer may be
+        released."""
+        if self.free_at != done:
+            return
+        cut = max(start, min(t, done))
+        self.busy_s -= done - cut
+        self.free_at = cut
+
 
 @dataclass
 class _TierFault:
@@ -239,6 +254,12 @@ class TieredRecord:
     # stream x tiered composition: the on-glass provisional prediction
     # emitted from cached features while this offload was in flight
     glass_partial: Optional[Prediction] = None
+    # speculative dual placement: this arrival raced glass against the
+    # best remote; the winner's timeline is the record's, the loser's
+    # would-have-emitted instant is kept for the win-margin analysis
+    speculative: bool = False
+    race_winner: Optional[str] = None
+    race_loser_emit: Optional[float] = None
 
     @property
     def latency_s(self) -> float:
@@ -312,7 +333,20 @@ class PlacementPolicy:
     historical timeline bit-reproducible; pass True/False to override
     either way. ``force`` pins placement for ablations: a host name
     pins everything, a ``{submodule: host}`` dict pins per submodule.
-    ``adaptive=False`` always offloads to the cheapest remote."""
+    ``adaptive=False`` always offloads to the cheapest remote.
+
+    The two robustness rungs (both OFF by default so every historical
+    timeline stays bit-reproducible):
+
+      * ``speculation`` — a :class:`SpeculationPolicy` arming
+        speculative dual placement: an arrival whose estimated
+        completion leaves less than the configured margin before the
+        deadline races glass against the best remote, commits whichever
+        returns first, and cancels the loser (cancel-on-commit);
+      * ``redispatch`` — when a tier dies with a flight outstanding,
+        re-dispatch the lost flight to the next-best SURVIVING remote
+        (falling back to glass only when none exists) instead of
+        always re-running on glass."""
     profile: ProfileTable
     trace: BandwidthTrace
     tiers: Optional[Tuple[str, ...]] = None
@@ -325,6 +359,8 @@ class PlacementPolicy:
     force: Optional[Union[str, Dict[str, str]]] = None
     contention_aware: Optional[bool] = None     # None = on iff N-tier
     tail_placement: Optional[bool] = None       # None = on iff N-tier
+    speculation: Optional[SpeculationPolicy] = None
+    redispatch: bool = False
 
 
 @dataclass
@@ -450,7 +486,9 @@ class EMSServeEngine:
             self.policy = MultiTierPolicy(
                 pp.profile, self.monitors, local=self.local_name,
                 tier_of={n: h.tier for n, h in self.hosts.items()},
-                adaptive=pp.adaptive, force=pp.force)
+                adaptive=pp.adaptive, force=pp.force,
+                speculation=pp.speculation)
+            self.redispatch = pp.redispatch
             # the fastest remote is the legacy 'edge' for the 2-tier
             # accessor surface (uplink/downlink/crash_at/...)
             self._primary = min(
@@ -470,9 +508,11 @@ class EMSServeEngine:
             # which would force spurious re-ships)
             self._replica_versions: Dict[str, Dict[Tuple[str, str], int]] \
                 = {n: {} for n in self.remote_names}
-            # fault injection / detection / restart, per remote tier
+            # fault injection / detection / restart, per remote tier;
+            # _schedule holds the not-yet-armed chaos cycles per tier
             self._faults: Dict[str, _TierFault] = {
                 n: _TierFault() for n in self.remote_names}
+            self._schedule: Dict[str, deque] = {}
             self.fallback_count = 0
             self.rejoin_count = 0
             self.offloaded_count = 0
@@ -480,6 +520,11 @@ class EMSServeEngine:
             self.place_counts: Dict[str, int] = {n: 0 for n in names}
             self.tail_counts: Dict[str, int] = {n: 0 for n in names}
             self._total_latency = 0.0
+            # speculative dual placement / mid-flight re-dispatch
+            self.spec_count = 0
+            self.spec_wins: Dict[str, int] = {n: 0 for n in names}
+            self.spec_crash_saves = 0
+            self.redispatch_count = 0
 
     # ------------------------------------------------------------ setup
 
@@ -835,6 +880,32 @@ class EMSServeEngine:
     def inject_edge_crash(self, t: float):
         self.inject_crash(t)
 
+    def inject_schedule(self, schedule):
+        """Install a multi-cycle crash/rejoin schedule (an iterable of
+        :class:`repro.serving.chaos.FaultEvent`, e.g. from
+        ``chaos_schedule``). The first cycle of each tier arms
+        immediately; each subsequent cycle arms when the previous one's
+        rejoin completes, so repeated crash -> re-dispatch/fallback ->
+        rejoin -> re-warm rounds replay on the simulated clock."""
+        from repro.serving.chaos import validate_schedule
+        entries = validate_schedule(list(schedule))
+        unknown = {e.tier for e in entries} - set(self.remote_names)
+        if unknown:
+            raise ValueError(f"schedule names unknown tier(s) "
+                             f"{sorted(unknown)}; remotes are "
+                             f"{self.remote_names}")
+        for e in entries:
+            self._schedule.setdefault(e.tier, deque()).append(e)
+        for n in list(self._schedule):
+            if self._faults[n].crash_at is None:
+                self._install_next_fault(n)
+
+    def _install_next_fault(self, tier: str):
+        q = self._schedule.get(tier)
+        if q:
+            e = q.popleft()
+            self.inject_crash(e.crash_at, tier, rejoin_at=e.rejoin_at)
+
     def schedule_rejoin(self, t: float, tier: Optional[str] = None):
         tier = self._primary if tier is None else tier
         f = self._faults[tier]
@@ -869,15 +940,23 @@ class EMSServeEngine:
 
     def _usable_remotes(self, now: float) -> List[str]:
         """Remote tiers a decision made at ``now`` may target, applying
-        any heartbeat detection or restart the clock has crossed."""
+        any heartbeat detection or restart the clock has crossed. Under
+        a chaos schedule, a rejoin arms the tier's NEXT scheduled cycle
+        and the loop re-checks — several crash/rejoin rounds may have
+        elapsed between two arrivals."""
         out = []
         for n in self.remote_names:
-            f = self._faults[n]
-            if not f.dead and f.detect_at is not None \
-                    and now >= f.detect_at:
-                self._mark_dead(n)
-            if f.dead and f.rejoin_at is not None and now >= f.rejoin_at:
-                self._rejoin(n, f.rejoin_at)
+            while True:
+                f = self._faults[n]
+                if not f.dead and f.detect_at is not None \
+                        and now >= f.detect_at:
+                    self._mark_dead(n)
+                if f.dead and f.rejoin_at is not None \
+                        and now >= f.rejoin_at:
+                    self._rejoin(n, f.rejoin_at)
+                    self._install_next_fault(n)
+                    continue
+                break
             if not self._faults[n].dead:
                 out.append(n)
         return out
@@ -987,20 +1066,30 @@ class EMSServeEngine:
         avail = self._usable_remotes(now)
         queues = self._queues(now)
         dec = self.policy.decide(f"enc:{event.modality}", payload_b, now,
-                                 queues=queues, available=avail)
+                                 queues=queues, available=avail,
+                                 lateness_s=max(0.0, now - t_a))
 
         partial = None
-        if dec.tier != self.local_name and self.glass_partials:
-            partial = self._glass_provisional(st, prev_observed, now)
-        if self.tail_placement:
-            rec = self._placed_event(st, event, model_name, payload_b,
-                                     now, dec, avail, queues,
-                                     prev_observed)
-        elif dec.tier != self.local_name:
-            rec = self._remote_event(st, event, model_name, payload_b,
-                                     now, dec, dec.tier)
+        if dec.speculate and dec.best_remote is not None:
+            # deadline margin too thin to trust the estimate: race glass
+            # against the best remote, commit the first result, cancel
+            # the loser. The glass racer IS the immediate answer, so no
+            # separate provisional partial; the race also supersedes
+            # tail splitting (both racers run encoder+tail co-located).
+            rec = self._race_event(st, event, model_name, payload_b,
+                                   now, dec, dec.best_remote)
         else:
-            rec = self._glass_event(st, event, model_name, now, dec)
+            if dec.tier != self.local_name and self.glass_partials:
+                partial = self._glass_provisional(st, prev_observed, now)
+            if self.tail_placement:
+                rec = self._placed_event(st, event, model_name, payload_b,
+                                         now, dec, avail, queues,
+                                         prev_observed)
+            elif dec.tier != self.local_name:
+                rec = self._remote_event(st, event, model_name, payload_b,
+                                         now, dec, dec.tier)
+            else:
+                rec = self._glass_event(st, event, model_name, now, dec)
         if partial is not None:
             rec.glass_partial = partial
 
@@ -1095,19 +1184,159 @@ class EMSServeEngine:
 
     def _crash_fallback(self, tier: str, st: SessionView, event: Event,
                         model_name: Optional[str], now: float,
-                        dec: TierDecision, *, feats=None,
-                        outputs=None) -> TieredRecord:
+                        dec: TierDecision, *, payload_b: Optional[int] = None,
+                        feats=None, outputs=None) -> TieredRecord:
         """A remote participant died before its transmission completed:
-        mark it dead at the first missed heartbeat and re-run the whole
-        event on glass from there (the already-computed numerics are
-        reused — placement never changes the math, so the re-run's
-        arrays are the in-flight ones)."""
+        mark it dead at the first missed heartbeat, then re-dispatch the
+        lost flight. With ``redispatch`` on and a surviving remote
+        available, the flight goes to the next-best surviving remote
+        (a fresh placement decision at the detection instant, restricted
+        to survivors); otherwise — or when the policy rung is off — it
+        re-runs on glass. Either way the already-computed numerics are
+        reused: placement never changes the math, so the re-run's
+        arrays are the in-flight ones. Cascading crashes recurse — a
+        re-dispatch target that also dies falls through again until a
+        survivor (ultimately glass) emits."""
         t_detect = max(now, self._faults[tier].detect_at)
         self._mark_dead(tier)
+        detect_s = max(0.0, t_detect - now)
+        if self.redispatch and payload_b is not None:
+            survivors = self._usable_remotes(t_detect)
+            if survivors:
+                dec2 = self.policy.decide(
+                    f"enc:{event.modality}", payload_b, t_detect,
+                    queues=self._queues(t_detect), available=survivors)
+                B = dec2.best_remote
+                if B is not None:
+                    self.redispatch_count += 1
+                    return self._remote_event(
+                        st, event, model_name, payload_b, t_detect, dec2,
+                        B, feats=feats, outputs=outputs, fallback=True,
+                        detect_s=detect_s)
         return self._glass_event(st, event, model_name, t_detect, dec,
-                                 fallback=True,
-                                 detect_s=max(0.0, t_detect - now),
+                                 fallback=True, detect_s=detect_s,
                                  feats=feats, outputs=outputs)
+
+    def _race_event(self, st: SessionView, event: Event,
+                    model_name: Optional[str], payload_b: int,
+                    now: float, dec: TierDecision, A: str) -> TieredRecord:
+        """Speculative dual placement (cancel-on-commit): dispatch the
+        arriving submodule on glass AND remote ``A`` simultaneously,
+        commit whichever result reaches the glasses first, and cancel
+        the loser at the commit instant — its in-flight transfer never
+        delivers, its un-run compute is released, and nothing of it
+        ever commits (the cache would refuse the late duplicate
+        anyway: same step, structural no-op). The numerics run ONCE —
+        both racers share the same arrays, so the committed result is
+        bit-equal to the monolithic reference whichever side wins. A
+        remote crash mid-race is absorbed with NO detection stall: the
+        glass racer is already running, so the EMT pays the glass
+        latency instead of the missed-heartbeat timeout (counted in
+        ``spec_crash_saves``, not as a fallback)."""
+        m = event.modality
+        local = self.local_name
+        host = self.hosts[A]
+        up_ch = self.fabric.channel(local, A)
+        down_ch = self.fabric.channel(A, local)
+
+        # ---- real numerics once; the racers share the arrays
+        feats = self._run_encoders(st, m)
+        outputs = None
+        if model_name is not None:
+            gathered = self._gather(st, model_name, m, feats)
+            if gathered is not None:
+                outputs = self.models[model_name].tail(
+                    self.params[model_name], gathered)
+
+        # ---- glass racer: always booked (the hedge that cannot crash)
+        g_dur = (self._enc_duration(m, len(feats), self.glass)
+                 if feats else 0.0)
+        if outputs is not None:
+            g_dur += self.glass.time("tail")
+        g_start, g_done = self.glass.occupy(g_dur, now)
+
+        # ---- remote racer: the uplink truly dispatches; compute and
+        # downlink are PLANNED via eta() so a loss unwinds cleanly
+        sync_b, synced = self._sync_bytes(A, st, model_name, skip=m)
+        up = up_ch.send(payload_b + sync_b, now)
+        r_dur = self._enc_duration(m, len(feats), host) if feats else 0.0
+        if outputs is not None:
+            r_dur += host.time("tail")
+        down_b = sum(payload_nbytes(f) for f in feats.values())
+        if outputs is not None:
+            down_b += payload_nbytes(outputs)
+        r_done = max(up.t_deliver, host.free_at) + r_dur
+        r_emit = down_ch.eta(down_b, r_done)
+        crashed = self._dies_before(A, r_emit)
+
+        # tie -> local: offloading must strictly win (the legacy rule)
+        glass_wins = crashed or g_done <= r_emit
+        self.spec_count += 1
+        stamp_fresh_remote = False
+
+        if glass_wins:
+            stop = g_done                        # the commit instant
+            if up.t_deliver > stop:
+                # payload still in flight at commit: the wire frees now
+                # and the remote never computes
+                up_ch.cancel(up.flight, t=stop)
+            else:
+                rs, rd = host.occupy(r_dur, up.t_deliver)
+                cut = (min(stop, self._faults[A].crash_at) if crashed
+                       else stop)
+                host.release(rs, rd, cut)        # un-run compute freed
+                if not self._dies_before(A, up.t_deliver):
+                    versions = self._replica_versions[A]
+                    for k, version in synced:
+                        versions[k] = version
+                if rd <= stop and not self._dies_before(A, rd):
+                    # loser finished computing; its result transfer is
+                    # recalled at commit (a dead-on-the-wire sender is
+                    # recalled at its crash instant instead)
+                    stamp_fresh_remote = True
+                    down = down_ch.send(down_b, rd)
+                    down_ch.cancel(down.flight, t=cut)
+            winner, t_start, t_emit = local, g_start, g_done
+            uplink_s = downlink_s = 0.0
+            compute_s, loser_emit = g_dur, r_emit
+            self.on_glass_count += 1
+            if crashed:
+                self.spec_crash_saves += 1
+        else:
+            _rs, rd = host.occupy(r_dur, up.t_deliver)
+            down = down_ch.send(down_b, rd)
+            # cancel the glass racer: free the un-run tail of its booking
+            self.glass.release(g_start, g_done, down.t_deliver)
+            versions = self._replica_versions[A]
+            for k, version in synced:
+                versions[k] = version
+            stamp_fresh_remote = True
+            winner, t_start, t_emit = A, up.t_send, down.t_deliver
+            uplink_s = up.t_deliver - up.t_send
+            downlink_s = down.t_deliver - rd
+            compute_s, loser_emit = r_dur, g_done
+            self.offloaded_count += 1
+
+        # ---- commit ONCE, for the winner only
+        self._commit_features(st, m, feats, tier=winner)
+        if outputs is not None:
+            self._touch_consumed(st, model_name)
+            self.tail_counts[winner] += 1
+        if stamp_fresh_remote:
+            # the loser computed (or received) the same fresh feature;
+            # its replica holds the committed version
+            self._stamp_fresh(A, st, m)
+        self.place_counts[winner] += 1
+        self.spec_wins[winner] += 1
+        return TieredRecord(
+            sid=st.sid, index=event.index, modality=m, model=model_name,
+            tier=winner, kind=self._kind(model_name),
+            t_arrival=event.arrival_time, t_start=t_start, t_emit=t_emit,
+            uplink_s=uplink_s, downlink_s=downlink_s, compute_s=compute_s,
+            decision=dec, outputs=outputs, enc_tier=winner,
+            tail_tier=winner if outputs is not None else None,
+            speculative=True, race_winner=winner,
+            race_loser_emit=loser_emit)
 
     def _glass_event(self, st: SessionView, event: Event,
                      model_name: Optional[str], now: float,
@@ -1148,9 +1377,13 @@ class EMSServeEngine:
     def _remote_event(self, st: SessionView, event: Event,
                       model_name: Optional[str], payload_b: int,
                       now: float, dec: TierDecision, A: str, *,
-                      feats=None, outputs=None) -> TieredRecord:
+                      feats=None, outputs=None, fallback: bool = False,
+                      detect_s: float = 0.0) -> TieredRecord:
         """Encoder AND tail on remote tier ``A`` (the co-located path —
-        with ``tail_placement`` off this is the only remote shape)."""
+        with ``tail_placement`` off this is the only remote shape).
+        ``fallback``/``detect_s`` mark a mid-flight re-dispatch: the
+        flight already died once on another tier and was re-aimed here
+        at the detection instant."""
         m = event.modality
         host = self.hosts[A]
         up_ch = self.fabric.channel(self.local_name, A)
@@ -1184,7 +1417,8 @@ class EMSServeEngine:
         # mid-transfer loses the result exactly like one mid-encode
         if self._dies_before(A, down_ch.eta(down_b, t_done)):
             return self._crash_fallback(A, st, event, model_name, now,
-                                        dec, feats=feats, outputs=outputs)
+                                        dec, payload_b=payload_b,
+                                        feats=feats, outputs=outputs)
 
         # ---- success: commit to the glass cache, ship the bytes
         self._commit_features(st, m, feats, tier=A)
@@ -1200,6 +1434,8 @@ class EMSServeEngine:
         self.place_counts[A] += 1
         if outputs is not None:
             self.tail_counts[A] += 1
+        if fallback:
+            self.fallback_count += 1
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
             tier=A, kind=self._kind(model_name),
@@ -1207,7 +1443,8 @@ class EMSServeEngine:
             t_emit=down.t_deliver,
             uplink_s=up.t_deliver - up.t_send,
             downlink_s=down.t_deliver - t_done,
-            compute_s=dur, decision=dec, outputs=outputs,
+            compute_s=dur, fallback=fallback, detect_s=detect_s,
+            decision=dec, outputs=outputs,
             enc_tier=A, tail_tier=A if outputs is not None else None)
 
     # ------------------------------------------- per-submodule placement
@@ -1356,8 +1593,8 @@ class EMSServeEngine:
             down_ch = self.fabric.channel(A, local)
             if self._dies_before(A, down_ch.eta(feat_b, t_enc_done)):
                 return self._crash_fallback(A, st, event, model_name, now,
-                                            dec, feats=feats,
-                                            outputs=outputs)
+                                            dec, payload_b=payload_b,
+                                            feats=feats, outputs=outputs)
             down = down_ch.send(feat_b, t_enc_done)
             self._commit_features(st, m, feats, tier=A)
             self._stamp_fresh(A, st, m)
@@ -1388,7 +1625,8 @@ class EMSServeEngine:
         hop_ch = self.fabric.channel(A, B)
         if self._dies_before(A, hop_ch.eta(feat_b, t_enc_done)):
             return self._crash_fallback(A, st, event, model_name, now,
-                                        dec, feats=feats, outputs=outputs)
+                                        dec, payload_b=payload_b,
+                                        feats=feats, outputs=outputs)
         hop = hop_ch.send(feat_b, t_enc_done)
         ready = max(hop.t_deliver,
                     sync_d.t_deliver if sync_d is not None else 0.0)
@@ -1398,7 +1636,8 @@ class EMSServeEngine:
         down_b = feat_b + out_b         # the result carries the cache home
         if self._dies_before(B, down_ch.eta(down_b, t_tail_done)):
             return self._crash_fallback(B, st, event, model_name, now,
-                                        dec, feats=feats, outputs=outputs)
+                                        dec, payload_b=payload_b,
+                                        feats=feats, outputs=outputs)
         down = down_ch.send(down_b, t_tail_done)
         self._commit_features(st, m, feats, tier=A)
         self._touch_consumed(st, model_name)
@@ -1425,7 +1664,8 @@ class EMSServeEngine:
     def run_arrivals(self, episodes: Dict[str, List[Event]], payload_fn,
                      *, aggregate=None, sim_window: Optional[float] = None,
                      crash_at: Optional[float] = None,
-                     rejoin_at: Optional[float] = None):
+                     rejoin_at: Optional[float] = None,
+                     schedule=None):
         """Drive sessions through their episodes in GLOBAL arrival-time
         order (the field regime: one incident, many responders, one
         interleaved stream — ``core.episodes.merge_arrivals``).
@@ -1446,12 +1686,16 @@ class EMSServeEngine:
                 self.inject_crash(crash_at, rejoin_at=rejoin_at)
             elif rejoin_at is not None:
                 raise ValueError("rejoin_at requires crash_at")
+            if schedule is not None:
+                self.inject_schedule(schedule)
             for _t, sid, ev in arrivals:
                 self.submit(sid, ev, payload_fn(sid, ev),
                             aggregate=aggregate)
             return self.records
-        if crash_at is not None or rejoin_at is not None:
-            raise ValueError("crash_at/rejoin_at require tiered placement")
+        if crash_at is not None or rejoin_at is not None \
+                or schedule is not None:
+            raise ValueError("crash_at/rejoin_at/schedule require tiered "
+                             "placement")
         if sim_window is None:
             for _t, sid, ev in arrivals:
                 self.submit(sid, ev, payload_fn(sid, ev),
@@ -1563,6 +1807,22 @@ class EMSServeEngine:
         exactly when per-submodule tail placement split a tail from its
         encoder."""
         return dict(self.tail_counts)
+
+    def speculation_stats(self) -> dict:
+        """Speculative-dual-placement and re-dispatch accounting:
+        how many arrivals raced, which host won each race, how many
+        remote crashes the race absorbed without a detection stall,
+        how many lost flights re-aimed at a surviving remote, plus the
+        commit-protocol audit trail (cancelled transfers, refused
+        duplicate/stale cache commits — both must stay refusals, never
+        visible state)."""
+        return {"races": self.spec_count,
+                "wins": dict(self.spec_wins),
+                "crash_saves": self.spec_crash_saves,
+                "redispatches": self.redispatch_count,
+                "cancelled_msgs": self.fabric.cancelled_msgs(),
+                "duplicate_commits": self.cache.duplicate_commits,
+                "stale_commits": self.cache.stale_commits}
 
 
 # ======================================================================

@@ -55,6 +55,13 @@ class TieredEMSServe(EMSServeEngine):
     contention-aware decisions and per-submodule tail placement by
     default; without it, the historical 2-tier contention-blind
     co-located behavior is preserved bit for bit.
+
+    ``speculation`` (a :class:`~repro.core.offload.SpeculationPolicy`)
+    arms speculative dual placement — deadline-pressured arrivals race
+    glass against the best remote under the cancel-on-commit protocol;
+    ``redispatch=True`` re-aims a flight lost to a tier crash at the
+    next-best surviving remote instead of always re-running on glass.
+    Both default off, preserving every historical timeline.
     """
 
     def __init__(self, models: Dict[str, SplitModel],
@@ -66,6 +73,7 @@ class TieredEMSServe(EMSServeEngine):
                  adaptive: bool = True, force=None,
                  contention_aware: Optional[bool] = None,
                  tail_placement: Optional[bool] = None,
+                 speculation=None, redispatch: bool = False,
                  share_encoders: bool = False,
                  bucketer: Optional[Bucketer] = None,
                  max_history: Optional[int] = 256):
@@ -79,6 +87,7 @@ class TieredEMSServe(EMSServeEngine):
                 edge_tier=edge_tier, hb_period=hb_period,
                 link_latency_s=link_latency_s, adaptive=adaptive,
                 force=force, contention_aware=contention_aware,
-                tail_placement=tail_placement),
+                tail_placement=tail_placement, speculation=speculation,
+                redispatch=redispatch),
             share_encoders=share_encoders,
             max_history=max_history)

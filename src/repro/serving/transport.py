@@ -19,15 +19,25 @@ that link on the simulated clock:
   * **in-order delivery** — a TCP-like stream: a message never overtakes
     an earlier one, so a delivery time is clamped to be >= the previous
     message's (head-of-line blocking under a bandwidth dip is modeled,
-    not wished away).
+    not wished away);
+  * **cancellable flights** — every send is a *flight* with a unique id
+    (fabric-wide when the channel belongs to a :class:`TierFabric`). A
+    flight cancelled before its delivery instant NEVER delivers: the
+    receiver never sees the bytes, and if the flight was the in-order
+    frontier the wire frees at the cancel instant instead of the
+    phantom full-delivery time. Speculative dual placement leans on
+    this: the losing racer's in-flight transfer is cancelled at the
+    winner's commit, so a stale result cannot arrive later and clobber
+    a newer cache version (cancel-on-commit).
 
 Lifetime byte/message counters make the transport cost auditable in
 benchmark reports (``BENCH_tiered.json`` breaks them out per link).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, Iterator, List, Optional
 
 from repro.core.offload import BandwidthTrace
 # THE byte-sizing rule lives in core (the benchmarks report with it);
@@ -43,6 +53,14 @@ class Delivery:
     nbytes: int
     transfer_s: float           # serialization time (nbytes / bandwidth)
     queued_s: float             # extra wait behind earlier in-flight messages
+    flight: int = -1            # per-flight id (unique within its fabric)
+    cancelled: bool = False     # cancel-on-commit: never delivers
+
+    @property
+    def delivered_at(self) -> Optional[float]:
+        """Delivery instant, or None — a cancelled flight never
+        delivers."""
+        return None if self.cancelled else self.t_deliver
 
 
 @dataclass
@@ -56,9 +74,17 @@ class TransportChannel:
     bytes_sent: int = 0
     msgs_sent: int = 0
     busy_s: float = 0.0                 # total serialization seconds
+    cancelled_msgs: int = 0
+    cancelled_bytes: int = 0
     _last_deliver: float = field(default=0.0, repr=False)
     deliveries: List[Delivery] = field(default_factory=list, repr=False)
     max_history: Optional[int] = 256
+    # flight-id allocator; a TierFabric injects ONE shared counter into
+    # every channel it creates so ids are unique fabric-wide
+    fids: Iterator[int] = field(default_factory=itertools.count,
+                                repr=False)
+    _flights: Dict[int, Delivery] = field(default_factory=dict,
+                                          repr=False)
 
     def eta(self, nbytes: int, t: float) -> float:
         """Delivery time a ``send(nbytes, t)`` WOULD produce, without
@@ -81,19 +107,54 @@ class TransportChannel:
         arrival = t + self.latency_s + transfer
         queued = max(0.0, self._last_deliver - arrival)
         d = Delivery(t_send=t, t_deliver=arrival + queued, nbytes=nbytes,
-                     transfer_s=transfer, queued_s=queued)
+                     transfer_s=transfer, queued_s=queued,
+                     flight=next(self.fids))
         self._last_deliver = d.t_deliver
         self.bytes_sent += nbytes
         self.msgs_sent += 1
         self.busy_s += transfer
         self.deliveries.append(d)
+        self._flights[d.flight] = d
         if self.max_history is not None:
             del self.deliveries[:-self.max_history]
+            if len(self._flights) > 4 * self.max_history:
+                keep = {x.flight for x in self.deliveries}
+                self._flights = {f: x for f, x in self._flights.items()
+                                 if f in keep}
         return d
+
+    def cancel(self, flight: int, t: Optional[float] = None) -> bool:
+        """Abort an in-flight delivery (cancel-on-commit). Returns True
+        iff the flight was live and got cancelled; a flight already
+        delivered by ``t`` is past the commit point and cannot be
+        recalled (False). A cancelled flight never delivers. If the
+        flight was the in-order frontier, the wire frees at the cancel
+        instant instead of the phantom full-delivery time."""
+        d = self._flights.get(flight)
+        if d is None or d.cancelled:
+            return False
+        if t is not None and t >= d.t_deliver:
+            return False                # already delivered — too late
+        d.cancelled = True
+        self.cancelled_msgs += 1
+        self.cancelled_bytes += d.nbytes
+        if self._last_deliver == d.t_deliver:
+            prev = max((x.t_deliver for x in self.deliveries
+                        if not x.cancelled), default=0.0)
+            self._last_deliver = max(prev, t if t is not None
+                                     else d.t_send)
+        return True
+
+    def completed(self) -> List[Delivery]:
+        """Deliveries that actually reached the receiver (cancelled
+        flights never deliver)."""
+        return [d for d in self.deliveries if not d.cancelled]
 
     def stats(self) -> dict:
         return {"name": self.name, "msgs": self.msgs_sent,
-                "bytes": self.bytes_sent, "busy_s": self.busy_s}
+                "bytes": self.bytes_sent, "busy_s": self.busy_s,
+                "cancelled_msgs": self.cancelled_msgs,
+                "cancelled_bytes": self.cancelled_bytes}
 
 
 # ======================================================================
@@ -132,6 +193,10 @@ class TierFabric:
         self.latency_s = latency_s
         self.overhead_bytes = overhead_bytes
         self._channels = {}
+        # ONE flight-id space across every channel: a flight id names
+        # its transfer unambiguously fabric-wide (cancel-on-commit
+        # passes ids around without caring which link carries them)
+        self._fids = itertools.count()
 
     def trace(self, src: str, dst: str):
         remotes = [t for t in (src, dst) if t != self.local]
@@ -147,8 +212,17 @@ class TierFabric:
         if ch is None:
             ch = self._channels[key] = TransportChannel(
                 self.trace(src, dst), latency_s=self.latency_s,
-                overhead_bytes=self.overhead_bytes, name=f"{src}->{dst}")
+                overhead_bytes=self.overhead_bytes, name=f"{src}->{dst}",
+                fids=self._fids)
         return ch
+
+    def cancel(self, flight: int, t: Optional[float] = None) -> bool:
+        """Cancel a flight by its fabric-wide id, whichever link carries
+        it."""
+        return any(ch.cancel(flight, t) for ch in self._channels.values())
+
+    def cancelled_msgs(self) -> int:
+        return sum(ch.cancelled_msgs for ch in self._channels.values())
 
     def stats(self) -> dict:
         return {f"{s}->{d}": ch.stats()

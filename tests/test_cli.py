@@ -1,0 +1,57 @@
+"""launch/serve.py argument validation (ISSUE 6 satellite).
+
+The fault-schedule flags are validated loudly and EARLY — before any
+zoo construction or profiling — so a mis-typed schedule fails in
+milliseconds, not after a minute of warmup. Each test drives the real
+``main()`` through ``sys.argv`` and pins the refusal message.
+"""
+import pytest
+
+from repro.launch import serve
+
+
+def _main(monkeypatch, *argv):
+    monkeypatch.setattr("sys.argv", ["serve.py", *argv])
+    serve.main()
+
+
+def test_outage_requires_tiered_spec(monkeypatch):
+    with pytest.raises(SystemExit, match="requires a tiered spec"):
+        _main(monkeypatch, "--engine", "stream", "--outage-at", "2")
+
+
+def test_rejoin_requires_outage(monkeypatch):
+    with pytest.raises(SystemExit, match="requires --outage-at"):
+        _main(monkeypatch, "--engine", "tiered", "--rejoin-at", "3")
+
+
+def test_rejoin_must_be_strictly_after_outage(monkeypatch):
+    with pytest.raises(SystemExit, match="must be strictly after"):
+        _main(monkeypatch, "--engine", "tiered",
+              "--outage-at", "2", "--rejoin-at", "2")
+
+
+def test_outage_beyond_episode_horizon_rejected(monkeypatch):
+    with pytest.raises(SystemExit, match="beyond the episode horizon"):
+        _main(monkeypatch, "--engine", "tiered", "--outage-at", "999")
+
+
+def test_speculate_requires_tiered_spec(monkeypatch):
+    with pytest.raises(SystemExit, match="require a tiered spec"):
+        _main(monkeypatch, "--engine", "stream", "--speculate")
+    with pytest.raises(SystemExit, match="require a tiered spec"):
+        _main(monkeypatch, "--engine", "batch", "--redispatch")
+
+
+def test_chaos_seed_requires_tiered_and_tiers(monkeypatch):
+    with pytest.raises(SystemExit, match="requires a tiered spec"):
+        _main(monkeypatch, "--engine", "stream", "--chaos-seed", "7")
+    with pytest.raises(SystemExit, match="needs --tiers"):
+        _main(monkeypatch, "--engine", "tiered", "--chaos-seed", "7")
+
+
+def test_chaos_seed_conflicts_with_outage(monkeypatch):
+    with pytest.raises(SystemExit, match="conflicts with --outage-at"):
+        _main(monkeypatch, "--engine", "tiered",
+              "--tiers", "glass,ph1,edge64x",
+              "--chaos-seed", "7", "--outage-at", "2")

@@ -117,6 +117,35 @@ def test_cache_touch_restamps():
     assert c.get("s", "t", input_step=5).feature == 0
 
 
+def test_cache_double_commit_is_structural_noop():
+    """Idempotent commits (ISSUE 6): re-committing the step the entry
+    already holds — a losing speculative racer landing late — changes
+    NOTHING: feature, step, and version all stand (the version not
+    bumping is what keeps tier replicas from re-shipping), and the
+    refusal is audited."""
+    c = FeatureCache()
+    assert c.put("s", "t", 1.0, step=3, tier="glass")
+    assert not c.put("s", "t", 2.0, step=3, tier="edge")
+    e = c.get("s", "t")
+    assert (e.feature, e.step, e.version, e.tier) == (1.0, 3, 0, "glass")
+    assert c.duplicate_commits == 1 and c.stale_commits == 0
+
+
+def test_cache_stale_late_commit_refused():
+    """Monotone commits (ISSUE 6): a commit at an OLDER step than the
+    stored entry — a crash-delayed straggler — is refused outright, so
+    a late flight can never regress the staleness clock."""
+    c = FeatureCache(max_staleness=1)
+    assert c.put("s", "t", 1.0, step=5)
+    assert not c.put("s", "t", 0.0, step=4, tier="edge")
+    e = c.get("s", "t", input_step=6)     # still 1 step: still fresh
+    assert (e.feature, e.step, e.version) == (1.0, 5, 0)
+    assert c.stale_commits == 1 and c.duplicate_commits == 0
+    # a genuinely newer commit still lands and bumps the version
+    assert c.put("s", "t", 2.0, step=6)
+    assert c.get("s", "t").version == 1
+
+
 # ----------------------------------------------------------- offloading
 
 def test_offload_rule_exact():

@@ -196,3 +196,142 @@ def test_rejoin_requires_crash_and_future_time(zoo_models):
         eng.schedule_rejoin(4.0, "edge64x")    # precedes the crash
     with pytest.raises(ValueError):
         eng.run_arrivals({}, lambda s, e: None, rejoin_at=1.0)  # no crash
+
+
+# ======================================================================
+# Mid-flight re-dispatch (ISSUE 6): a lost flight re-aims at the
+# next-best SURVIVING remote instead of always re-running on glass
+# ======================================================================
+
+def test_redispatch_lost_flight_to_surviving_remote(zoo_models):
+    """Same crash script as the failover scenario, but with
+    ``redispatch`` on: the flight lost to the edge crash lands on the
+    phone (the next-best survivor), pays only the detection stall plus
+    the phone's round trip — NOT a glass re-run — and parity holds."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, redispatch=True)
+    eng.inject_crash(2.1, "edge64x")
+    for i, (m, t) in enumerate([("text", 0.0), ("vitals", 1.0)]):
+        eng.submit("s0", Event(i, m, t), payloads[m])
+    # dispatched at 2.0, edge dies at 2.1 -> detected at 3.0 -> the
+    # SAME in-flight numerics re-aim at ph1
+    rec = eng.submit("s0", Event(2, "scene", 2.0), payloads["scene"])
+    assert rec.fallback and rec.enc_tier == "ph1"
+    assert rec.detect_s == pytest.approx(1.0)
+    assert rec.t_start >= 3.0
+    _assert_parity(rec, shared, cfg, payloads, ALL)
+    assert eng.redispatch_count == 1 and eng.fallback_count == 1
+    # the re-dispatch target's replica was synced on the re-aimed
+    # uplink: the phone now holds what it consumed and produced
+    key = "s0"
+    vers = eng._replica_versions["ph1"]
+    for mm in ALL:
+        assert (key, mm) in vers
+
+
+def test_redispatch_falls_back_to_glass_when_no_survivor(zoo_models):
+    """With EVERY remote dead by detection time, re-dispatch degrades
+    to the glass re-run — never a dispatch at a dead box."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, redispatch=True)
+    eng.inject_crash(2.05, "ph1")        # both detected at 3.0
+    eng.inject_crash(2.1, "edge64x")
+    rec = eng.submit("s0", Event(0, "scene", 2.0), payloads["scene"])
+    assert rec.fallback and rec.enc_tier == "glass"
+    _assert_parity(rec, shared, cfg, payloads, ("scene",))
+    assert eng.redispatch_count == 0 and eng.fallback_count == 1
+
+
+def test_redispatch_cascading_crash(zoo_models):
+    """The re-dispatch target can itself die mid-flight: the flight
+    cascades (edge -> phone -> glass), each hop paying its own
+    detection, and the final emission still matches the reference."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, redispatch=True)
+    eng.inject_crash(2.1, "edge64x")     # detected at 3.0
+    eng.inject_crash(3.1, "ph1")         # kills the re-dispatched flight
+    rec = eng.submit("s0", Event(0, "scene", 2.0), payloads["scene"])
+    assert rec.fallback and rec.enc_tier == "glass"
+    assert rec.t_start >= 4.0            # ph1's missed heartbeat
+    _assert_parity(rec, shared, cfg, payloads, ("scene",))
+    assert eng.redispatch_count == 1     # one re-aim, then glass
+    assert eng.fallback_count == 1       # one arrival, one fallback
+
+
+# ======================================================================
+# Chaos schedules (ISSUE 6): seeded random crash/rejoin cycles
+# ======================================================================
+
+def test_chaos_schedule_generator_is_valid_and_reproducible():
+    from repro.serving.chaos import FaultEvent, chaos_schedule, \
+        validate_schedule
+    a = chaos_schedule(11, horizon=30.0, tiers=("ph1", "edge64x"))
+    b = chaos_schedule(11, horizon=30.0, tiers=("ph1", "edge64x"))
+    assert a == b and len(a) >= 2
+    assert a != chaos_schedule(12, horizon=30.0, tiers=("ph1", "edge64x"))
+    for e in a:
+        assert 0.0 < e.crash_at < 30.0
+        assert e.rejoin_at is None or e.rejoin_at > e.crash_at
+    # structural validation rejects overlap and crash-after-no-rejoin
+    with pytest.raises(ValueError):
+        validate_schedule([FaultEvent(1.0, "ph1", 3.0),
+                           FaultEvent(2.0, "ph1", 4.0)])
+    with pytest.raises(ValueError):
+        validate_schedule([FaultEvent(1.0, "ph1", None),
+                           FaultEvent(5.0, "ph1", 6.0)])
+    with pytest.raises(ValueError):
+        FaultEvent(2.0, "ph1", 2.0)
+
+
+def test_chaos_cycles_replay_with_parity_and_staleness(zoo_models):
+    """Repeated crash -> re-dispatch/fallback -> rejoin -> re-warm
+    cycles from a seeded schedule: every emission stays bit-equal to
+    the reference, the <=1-step staleness invariant holds throughout
+    (every cache read asserts it live), commits stay duplicate-free,
+    and the cycles actually replay (multiple rejoins observed)."""
+    cfg, splits, shared, params, payloads = zoo_models
+    from repro.core import async_episode, horizon
+    from repro.serving.chaos import chaos_schedule
+    eps = {f"s{i}": async_episode("text_first", seed=i) for i in range(2)}
+    sched = chaos_schedule(5, horizon=horizon(eps),
+                           tiers=("ph1", "edge64x"),
+                           mean_up_s=1.5, mean_down_s=0.6,
+                           min_up_s=0.4, min_down_s=0.3)
+    assert len(sched) >= 4               # several cycles actually land
+    eng = _engine(splits, params, redispatch=True)
+    eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                     schedule=sched)
+    observed = {}
+    for r in eng.records:
+        obs = observed.setdefault(r.sid, [])
+        if r.modality not in obs:
+            obs.append(r.modality)
+        _assert_parity(r, shared, cfg, payloads, obs)
+    assert eng.rejoin_count >= 2         # cycles, not a single outage
+    ss = eng.speculation_stats()
+    assert ss["duplicate_commits"] == 0 and ss["stale_commits"] == 0
+    # end-state staleness: nothing in the cache lags its input > 1 step
+    for sid, st in eng.sessions.items():
+        for m, step in st.input_step.items():
+            e = eng.cache.peek(sid, m)
+            assert e is not None and step - e.step <= 1
+
+
+def test_chaos_multiple_cycles_between_two_arrivals(zoo_models):
+    """Several whole crash/rejoin cycles elapsing between two arrivals
+    are all applied lazily at the next decision — the rejoin counter
+    advances once per cycle, not once per arrival."""
+    cfg, splits, shared, params, payloads = zoo_models
+    from repro.serving.chaos import FaultEvent
+    eng = _engine(splits, params)
+    eng.inject_schedule([FaultEvent(1.0, "edge64x", 2.0),
+                         FaultEvent(3.0, "edge64x", 4.0),
+                         FaultEvent(5.0, "edge64x", 6.0)])
+    rec = eng.submit("s0", Event(0, "text", 0.5), payloads["text"])
+    assert rec.enc_tier == "edge64x" and not rec.fallback
+    # next arrival is AFTER all three cycles have come and gone
+    rec = eng.submit("s0", Event(1, "vitals", 20.0), payloads["vitals"])
+    assert rec.enc_tier == "edge64x" and not rec.fallback
+    assert eng.rejoin_count == 3
+    assert not eng._faults["edge64x"].dead
+    _assert_parity(rec, shared, cfg, payloads, ("text", "vitals"))

@@ -228,6 +228,117 @@ def test_softmax_ce_nonnegative_and_bounded(n, v, pyrng):
     assert np.isfinite(ce)
 
 
+# ------------------------------------------------- transport (ISSUE 6)
+
+_SENDS = st.lists(st.tuples(st.integers(1, 10**6),      # nbytes
+                            st.floats(0.0, 2.0)),       # inter-send gap
+                  min_size=1, max_size=30)
+
+
+def _channel(bw=1e5):
+    from repro.serving.transport import TransportChannel
+    return TransportChannel(BandwidthTrace.static(bw), latency_s=0.005)
+
+
+@settings(**SETTINGS)
+@given(_SENDS, st.floats(1e3, 1e9))
+def test_transport_in_order_delivery(sends, bw):
+    """A channel is a stream: whatever the send sizes and gaps, the
+    delivery sequence never reorders and every delivery respects the
+    link latency + serialization floor."""
+    ch = _channel(bw)
+    t, prev = 0.0, 0.0
+    for nbytes, gap in sends:
+        t += gap
+        d = ch.send(nbytes, t)
+        assert d.t_deliver >= prev              # in-order, never overtakes
+        assert d.t_deliver >= t + ch.latency_s + d.transfer_s - 1e-12
+        prev = d.t_deliver
+
+
+@settings(**SETTINGS)
+@given(_SENDS, st.integers(1, 10**6), st.integers(1, 10**6),
+       st.floats(0.0, 5.0))
+def test_transport_eta_monotone_and_never_early(sends, na, nb, t_probe):
+    """eta() is monotone in nbytes, never before the probe time, and
+    non-mutating: probing it never changes what a later send does."""
+    ch = _channel()
+    t = 0.0
+    for nbytes, gap in sends:
+        t += gap
+        ch.send(nbytes, t)
+    small, big = sorted((na, nb))
+    assert ch.eta(small, t_probe) <= ch.eta(big, t_probe)
+    assert ch.eta(big, t_probe) >= t_probe
+    before = ch.eta(small, t_probe)
+    ch.eta(big, t_probe * 2 + 1.0)              # probe again, elsewhere
+    assert ch.eta(small, t_probe) == before     # state untouched
+
+
+@settings(**SETTINGS)
+@given(_SENDS, st.data())
+def test_transport_cancellation_never_delivers(sends, data):
+    """A flight cancelled before its delivery instant NEVER delivers:
+    it leaves completed(), its delivered_at is None, the cancel is
+    audited, and a flight already delivered cannot be recalled."""
+    ch = _channel()
+    t, flights = 0.0, []
+    for nbytes, gap in sends:
+        t += gap
+        flights.append(ch.send(nbytes, t))
+    victim = data.draw(st.sampled_from(flights))
+    t_cancel = data.draw(st.floats(victim.t_send, victim.t_deliver * 2))
+    ok = ch.cancel(victim.flight, t=t_cancel)
+    assert ok == (t_cancel < victim.t_deliver)  # too late -> refused
+    if ok:
+        assert victim.cancelled and victim.delivered_at is None
+        assert victim not in ch.completed()
+        assert ch.cancelled_msgs == 1 and ch.cancelled_bytes == victim.nbytes
+        assert not ch.cancel(victim.flight, t=t_cancel)   # idempotent
+    else:
+        assert victim in ch.completed()
+    # the wire stays consistent: later sends still deliver in order
+    prev = max((d.t_deliver for d in ch.completed()), default=0.0)
+    d = ch.send(100, t + 1.0)
+    assert d.t_deliver >= prev and not d.cancelled
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e3, 1e9), st.floats(1e3, 1e9),
+       st.lists(st.floats(0.0, 100.0), min_size=1, max_size=20))
+def test_mintrace_bottlenecks_both_components(bw_a, bw_b, probes):
+    """A remote<->remote path runs at the slower of the two radio
+    links: MinTrace.at is <= both components everywhere."""
+    from repro.serving.transport import MinTrace
+    a, b = BandwidthTrace.static(bw_a), BandwidthTrace.static(bw_b)
+    mt = MinTrace(a, b)
+    for t in probes:
+        assert mt.at(t) <= a.at(t) and mt.at(t) <= b.at(t)
+        assert mt.at(t) == min(a.at(t), b.at(t))
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from(["ph1", "edge64x"]), st.integers(1, 10**5))
+def test_fabric_channels_cached_and_no_self_wire(dst, nbytes):
+    """The fabric hands out ONE channel per (src, dst) direction — so
+    in-order state and byte accounting live exactly once — and refuses
+    a wire from a tier to itself. Fabric-wide flight ids stay unique
+    across channels."""
+    from repro.serving.transport import TierFabric
+    fab = TierFabric("glass", {"ph1": BandwidthTrace.static(1e6),
+                               "edge64x": BandwidthTrace.static(1e7)})
+    ch = fab.channel("glass", dst)
+    assert ch is fab.channel("glass", dst)           # cached identity
+    assert fab.channel(dst, "glass") is not ch       # directions differ
+    with pytest.raises(ValueError):
+        fab.channel("glass", "glass")
+    d1 = fab.channel("glass", dst).send(nbytes, 0.0)
+    d2 = fab.channel(dst, "glass").send(nbytes, 0.0)
+    assert d1.flight != d2.flight                    # one id space
+    assert fab.cancel(d1.flight, t=0.0) or d1.t_deliver <= 0.0
+    assert fab.cancelled_msgs() == 1
+
+
 @settings(**SETTINGS)
 @given(st.integers(3, 100), st.randoms(use_true_random=False))
 def test_spearman_invariant_to_monotone_transform(n, pyrng):

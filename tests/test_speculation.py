@@ -1,0 +1,211 @@
+"""Speculative dual placement tier (ISSUE 6): cancel-on-commit racing.
+
+The load-bearing claims:
+  * a deadline-pressured arrival races glass against the best remote,
+    commits exactly ONE result (bit-equal to the reference — the racers
+    share the numerics), and cancels the loser at the commit instant;
+  * a cancelled flight never delivers and a released racer frees its
+    host's clock — no phantom occupancy, no phantom bytes;
+  * a remote crash mid-race is absorbed with NO detection stall (the
+    glass racer is the hedge), counted as a crash save, not a fallback;
+  * the commit protocol is duplicate-safe end to end: zero duplicate or
+    stale cache commits under racing;
+  * speculation defaults OFF — historical timelines never race.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthTrace, ProfileTable, emsnet_zoo,
+                        nlos_bandwidth, split)
+from repro.core.episodes import Event
+from repro.core.offload import SpeculationPolicy
+from repro.models import emsnet as E
+from repro.serving.api import build_engine
+
+ALL = ("text", "vitals", "scene")
+TIERS = ("glass", "ph1", "edge64x")
+BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
+        "tail": 0.005, "full": 0.15}
+RACE_ALWAYS = SpeculationPolicy(deadline_s=0.0, margin_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+def _engine(splits, params, *, bandwidth=5.0, **kw):
+    kw.setdefault("max_history", None)
+    kw.setdefault("tier_traces",
+                  {"ph1": BandwidthTrace.static(nlos_bandwidth(0.0))})
+    kw.setdefault("trace", BandwidthTrace.static(nlos_bandwidth(bandwidth)))
+    return build_engine(
+        splits, params, "tiered", share_encoders=True,
+        profile=ProfileTable(base=dict(BASE)), tiers=TIERS, **kw)
+
+
+def _assert_parity(rec, shared, cfg, payloads, observed):
+    assert rec.outputs is not None
+    if set(observed) == set(ALL):
+        want = E.forward(shared, cfg, payloads)
+    else:
+        want = E.partial_forward(shared, cfg, payloads, observed)
+    for k in want:
+        np.testing.assert_allclose(rec.outputs[k], want[k], atol=1e-5)
+
+
+def test_speculation_off_by_default(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params)
+    rec = eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert not rec.speculative and rec.race_winner is None
+    assert not rec.decision.speculate
+    assert eng.spec_count == 0
+
+
+def test_race_commits_once_remote_wins(zoo_models):
+    """With a fast remote, the remote racer wins: the record carries
+    the remote timeline, the glass racer's un-run booking is released
+    (no phantom occupancy), exactly one commit lands, and the output is
+    bit-equal to the reference."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, speculation=RACE_ALWAYS)
+    observed = []
+    for i, m in enumerate(ALL):
+        observed.append(m)
+        rec = eng.submit("s0", Event(i, m, float(i)), payloads[m])
+        assert rec.speculative and rec.race_winner == rec.tier
+        assert rec.race_winner != "glass"      # fast remote wins here
+        # the loser would have emitted strictly later
+        assert rec.race_loser_emit > rec.t_emit
+        _assert_parity(rec, shared, cfg, payloads, observed)
+    assert eng.spec_count == 3
+    assert sum(eng.spec_wins.values()) == 3 and eng.spec_wins["glass"] == 0
+    ss = eng.speculation_stats()
+    assert ss["duplicate_commits"] == 0 and ss["stale_commits"] == 0
+    # the glass racer's booking was released: only the run-before-commit
+    # stubs remain on the glass clock, less than 3 full racer bookings
+    full_racer = (sum(eng.glass.time(f"enc:{m}") for m in ALL)
+                  + 3 * eng.glass.time("tail"))
+    assert eng.glass.busy_s < full_racer
+
+
+def test_race_glass_wins_cancels_inflight_uplink(zoo_models):
+    """Starve the wire: the payload cannot reach the remote before the
+    glass racer finishes, so glass commits and the in-flight uplink is
+    cancelled — it never delivers, the remote never computes, and the
+    cancelled bytes are audited."""
+    cfg, splits, shared, params, payloads = zoo_models
+    # starve EVERY radio link (the phone's near-field tether included):
+    # a couple hundred bytes/s means no payload lands before the glass
+    # racer finishes
+    eng = _engine(splits, params, trace=BandwidthTrace.static(200.0),
+                  tier_traces={}, speculation=RACE_ALWAYS)
+    rec = eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec.speculative and rec.race_winner == "glass"
+    assert rec.race_loser_emit > rec.t_emit
+    _assert_parity(rec, shared, cfg, payloads, ("text",))
+    up = eng.fabric.channel("glass", rec.decision.best_remote)
+    assert up.cancelled_msgs == 1 and up.cancelled_bytes > 0
+    assert up.completed() == []                  # nothing ever delivered
+    # the loser's host never computed: its clock is untouched
+    assert eng.hosts[rec.decision.best_remote].busy_s == 0.0
+    ss = eng.speculation_stats()
+    assert ss["cancelled_msgs"] == 1 and ss["duplicate_commits"] == 0
+
+
+def test_race_absorbs_crash_without_detection_stall(zoo_models):
+    """The remote racer's tier dies mid-race: the glass racer commits
+    at ITS OWN finish — no missed-heartbeat stall, no fallback — and
+    the crash save is counted. The same arrival WITHOUT speculation
+    pays the full detection stall, which is exactly the latency the
+    hedge buys back."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, speculation=RACE_ALWAYS)
+    eng.inject_crash(0.05, "edge64x")
+    rec = eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec.speculative and rec.race_winner == "glass"
+    assert not rec.fallback and rec.detect_s == 0.0
+    _assert_parity(rec, shared, cfg, payloads, ("text",))
+    assert eng.spec_crash_saves == 1 and eng.fallback_count == 0
+
+    plain = _engine(splits, params)
+    plain.inject_crash(0.05, "edge64x")
+    rec2 = plain.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec2.fallback and rec2.detect_s > 0.0
+    assert rec.latency_s < rec2.latency_s        # the hedge pays
+
+
+def test_race_loser_late_result_cannot_regress_cache(zoo_models):
+    """Direct duplicate-safety regression on the live engine: replaying
+    a losing racer's commit (same step) and a crash-delayed straggler
+    (older step) against the committed cache is refused — version and
+    step stand, and the audit counters record both refusals."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _engine(splits, params, speculation=RACE_ALWAYS)
+    eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    eng.submit("s0", Event(1, "text", 1.0), payloads["text"])
+    e = eng.cache.peek("s0", "text")
+    step, version = e.step, e.version
+    # the losing racer's commit: same (session, modality, step)
+    assert not eng.cache.put("s0", "text", e.feature, step=step,
+                             tier="glass")
+    # a straggler from before the second arrival: older step
+    assert not eng.cache.put("s0", "text", e.feature, step=step - 1,
+                             tier="edge64x")
+    e2 = eng.cache.peek("s0", "text")
+    assert (e2.step, e2.version) == (step, version)
+    assert eng.cache.duplicate_commits == 1
+    assert eng.cache.stale_commits == 1
+
+
+def test_race_under_stream_glass_partials(zoo_models):
+    """The stream composition does not double-serve a racing arrival:
+    the glass racer IS the immediate answer, so no separate provisional
+    partial is emitted for speculative events."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(
+        splits, params, "stream+tiered", share_encoders=True,
+        profile=ProfileTable(base=dict(BASE)),
+        trace=BandwidthTrace.static(nlos_bandwidth(5.0)),
+        tiers=TIERS,
+        tier_traces={"ph1": BandwidthTrace.static(nlos_bandwidth(0.0))},
+        speculation=RACE_ALWAYS, max_history=None)
+    for i, m in enumerate(ALL):
+        rec = eng.submit("s0", Event(i, m, float(i)), payloads[m])
+        assert rec.speculative and rec.glass_partial is None
+    assert eng.spec_count == 3
+    assert eng.speculation_stats()["duplicate_commits"] == 0
+
+
+def test_margin_thresholds_gate_racing(zoo_models):
+    """Speculation triggers on thin margins only: a generous deadline
+    never races, a hopeless one always does, and the decision carries
+    the computed margin either way."""
+    cfg, splits, shared, params, payloads = zoo_models
+    lazy = _engine(splits, params,
+                   speculation=SpeculationPolicy(deadline_s=1e3))
+    rec = lazy.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert not rec.speculative and lazy.spec_count == 0
+    assert rec.decision.margin_s > 0.0
+    tight = _engine(splits, params,
+                    speculation=SpeculationPolicy(deadline_s=1e-6,
+                                                  margin_s=0.0))
+    rec = tight.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec.speculative and tight.spec_count == 1
