@@ -22,6 +22,18 @@ Reports (-> artifacts/BENCH_serving.json and CSV rows): sessions/sec
 and events/sec for both engines + speedup, p50/p99 per-event latency
 under the batched engine, XLA compile counts and the per-tick compile
 trace over the timed window.
+
+Ragged section (``result["ragged"]``, gated by ``passed_ragged``): the
+concatenated ragged flush path over a shared-parameter zoo with the
+segment-flash parity config on both sides. Three deterministic gates:
+(a) bit parity — ragged predictions at the reference's own cadence are
+``np.array_equal`` to the per-event unbucketed ``core.engine.EMSServe``;
+(b) kernel calls — every coalesced flush issues at most one packed
+encoder call per live modality plus ONE grouped tail (O(modalities)+1,
+vs O(modalities x buckets)+O(subsets) bucketed); (c) padded-FLOP
+fraction strictly below the bucketed baseline's on the same session
+mix. The legacy baseline/batched sections run exactly as before
+(ragged stays OFF there).
 """
 from __future__ import annotations
 
@@ -71,6 +83,105 @@ def _aggregate(old, new):
 
 def _pctl(xs, q):
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _ragged_section(n_sessions, n_ticks, seed=1):
+    """The ragged-vs-bucketed comparison on its own shared-parameter
+    zoo (the grouped tail requires one parameter pytree) with the
+    segment-flash bit-parity config on BOTH sides."""
+    import jax
+
+    from repro.core import EMSServe, emsnet_zoo, split
+    from repro.serving.api import build_engine
+
+    cfg = C.emsnet_cfg(True, text_encoder="microbert", vocab_size=512,
+                       max_text_len=16, vitals_hidden=32,
+                       use_flash_text=True, flash_segments=True)
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    eps, payloads = _episodes(n_sessions, n_ticks, cfg, seed=seed)
+
+    def payload_fn(sid, ev):
+        return payloads[sid][ev.modality]
+
+    # --- gate (a): bit parity at the reference's own per-event cadence
+    refs = {sid: EMSServe(splits, params, cached=True, real_time=True,
+                          session=sid) for sid in eps}
+    eng = build_engine(splits, params, "batch+stream",
+                       share_encoders=True, ragged=True,
+                       deadline_s=0.0, max_history=None)
+    bitwise, max_diff, n_compared = True, 0.0, 0
+    for t in range(n_ticks):
+        for sid, events in eps.items():
+            if t >= len(events):
+                continue
+            ev = events[t]
+            rec = refs[sid].on_event(ev, payload_fn(sid, ev),
+                                     aggregate=_aggregate)
+            rep = eng.submit(sid, ev, payload_fn(sid, ev),
+                             aggregate=_aggregate)
+            if rec.recommendation is None:
+                continue
+            (pred,) = rep.predictions
+            for k, want in rec.recommendation.items():
+                got = np.asarray(pred.outputs[k])
+                if not np.array_equal(got, np.asarray(want)):
+                    bitwise = False
+                    max_diff = max(max_diff,
+                                   float(np.abs(got - np.asarray(want)).max()))
+            n_compared += 1
+
+    # --- gates (b)+(c): coalesced ragged vs bucketed, same session mix
+    def coalesced(ragged):
+        e = build_engine(splits, params, "batch+stream",
+                         share_encoders=True, ragged=ragged,
+                         deadline_s=None, batch_bucket_min=2,
+                         max_history=None)
+        for t in range(n_ticks):
+            for sid, events in eps.items():
+                if t < len(events):
+                    e.submit(sid, events[t], payload_fn(sid, events[t]),
+                             aggregate=_aggregate)
+            e.flush()
+        return e
+
+    reng = coalesced(True)
+    beng = coalesced(False)
+    r_calls = [(f.n_encoder_calls, f.n_tail_calls) for f in reng.flushes]
+    b_calls = [(f.n_encoder_calls, f.n_tail_calls) for f in beng.flushes]
+    r_frac = float(np.mean([f.padded_flop_frac for f in reng.flushes]))
+    b_frac = float(np.mean([f.padded_flop_frac for f in beng.flushes]))
+    n_modalities = 3
+    gates = {
+        "passed_ragged_bit_parity": bool(bitwise and n_compared > 0),
+        "passed_ragged_kernel_calls": bool(
+            all(e <= n_modalities and tl <= 1 for e, tl in r_calls)
+            and sum(e + tl for e, tl in r_calls)
+            < sum(e + tl for e, tl in b_calls)),
+        "passed_ragged_padded_flops": bool(r_frac < b_frac),
+    }
+    return {
+        "config": {"text_encoder": cfg.text_encoder,
+                   "use_flash_text": True, "flash_segments": True,
+                   "n_sessions": n_sessions, "n_ticks": n_ticks},
+        "bit_parity_vs_unbucketed_reference": {
+            "predictions_compared": n_compared,
+            "bitwise_equal_atol0": bool(bitwise),
+            "max_abs_diff": max_diff,
+        },
+        "kernel_calls_per_flush": {
+            "ragged": [list(c) for c in r_calls],
+            "bucketed": [list(c) for c in b_calls],
+            "ragged_total": sum(e + tl for e, tl in r_calls),
+            "bucketed_total": sum(e + tl for e, tl in b_calls),
+        },
+        "padded_flop_frac": {"ragged": r_frac, "bucketed": b_frac},
+        "packed_shapes": reng.ragged.n_shapes(),
+        **gates,
+        "passed_ragged": all(gates.values()),
+    }
 
 
 def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
@@ -168,6 +279,10 @@ def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
                     for (m, b), n in sorted(beng.bucketer.histogram.items())},
     }
 
+    # ------- ragged grouped flush path (own zoo; legacy paths above
+    # ran with ragged OFF and are byte-for-byte what they always were)
+    result["ragged"] = _ragged_section(n_sessions, n_ticks)
+
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_serving.json").write_text(json.dumps(result, indent=2))
 
@@ -181,6 +296,17 @@ def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
     C.csv_row("serve_event_latency_p99",
               result["batched"]["p99_event_latency_ms"] * 1e3,
               f"p50_ms={result['batched']['p50_event_latency_ms']:.2f}")
+    rg = result["ragged"]
+    C.csv_row("serve_ragged_padded_flop_frac",
+              rg["padded_flop_frac"]["ragged"] * 1e6,
+              f"bucketed={rg['padded_flop_frac']['bucketed']:.3f};"
+              f"kernel_calls={rg['kernel_calls_per_flush']['ragged_total']}"
+              f"vs{rg['kernel_calls_per_flush']['bucketed_total']};"
+              f"bitwise={rg['bit_parity_vs_unbucketed_reference']['bitwise_equal_atol0']}")
+    if not rg["passed_ragged"]:
+        failed = [k for k, v in rg.items()
+                  if k.startswith("passed_") and not v]
+        raise SystemExit(f"ragged gates failed: {failed}")
     return result
 
 

@@ -37,6 +37,15 @@ class EMSNetConfig:
     # kernel body on CPU (this container); set False on real TPUs.
     use_flash_text: bool = False
     flash_interpret: bool = True
+    # ragged text attention: flash_segments routes the *natural* (B, S)
+    # path through the segment-masked flash kernel at the same fixed
+    # flash_block the packed ragged layout uses. Fixed per-block
+    # reduction shapes make a packed ragged call bit-identical to the
+    # per-row reference, so a bit-parity (atol 0) reference config must
+    # set use_flash_text=True, flash_segments=True with the same
+    # flash_block as the ragged engine.
+    flash_segments: bool = False
+    flash_block: int = 8
 
     @property
     def text_dims(self) -> Tuple[int, int, int, int]:

@@ -113,8 +113,131 @@ def stack_bucketed(payloads, batch_bucket: int):
     row i -> session i for the first ``len(payloads)`` rows."""
     if isinstance(payloads[0], dict):
         keys = payloads[0].keys()
+        for i, p in enumerate(payloads[1:], start=1):
+            if p.keys() != keys:
+                raise ValueError(
+                    f"stack_bucketed: payload 0 has keys {sorted(keys)} but "
+                    f"payload {i} has {sorted(p.keys())}; refusing to drop "
+                    "mismatched keys")
         return {k: pad_axis(jnp.concatenate([p[k] for p in payloads], axis=0),
                             batch_bucket, axis=0)
                 for k in keys}
     x = jnp.concatenate(list(payloads), axis=0)
     return pad_axis(x, batch_bucket, axis=0)
+
+
+@dataclass
+class RaggedBatch:
+    """Concatenated ragged layout: rows of different natural lengths
+    packed back-to-back into ONE flat buffer, so a flush issues a single
+    encoder call per modality regardless of how many length buckets are
+    live (vs one call per ``(modality, bucket)`` for :class:`Bucketer`).
+
+    ``pack`` returns the payload dict the (ragged-aware) encoders
+    consume. For ``text`` (B=1 rows of (1, S_i) int32):
+
+      * ``tokens``  (1, T) int32 — rows concatenated, PAD=0 between and
+        after; each row starts at a multiple of ``align`` (the flash
+        block size: block-aligned row starts are what make the packed
+        kernel bit-identical to per-row calls);
+      * ``row_ids`` (T,) int32 — position -> row index, -1 on padding
+        AND on a row's interior PAD tokens (so the segment mask equals
+        the reference ``tokens > 0`` key mask);
+      * ``pos``     (T,) int32 — position within the row (for the
+        positional embedding gather);
+      * ``offsets`` (R,) int32 / ``lengths`` (R,) int32 — row i occupies
+        ``[offsets[i], offsets[i] + lengths[i])``; surplus rows (R is
+        padded to a power of two) have length 0 and offset == the total
+        packed extent, so the segments tile the buffer exactly.
+
+    For ``vitals`` (rows of (1, S_i, n) float): ``x`` (1, T, n) packed
+    with ``align=1`` (the segmented scan has no cross-length reduction,
+    so alignment buys nothing), plus ``reset`` (T, 1, 1) bool marking
+    each row's first step, and the same ``offsets``/``lengths``.
+
+    Both T and R are padded to powers of two (T floored at
+    ``min_total``, R at ``min_rows``) so compile counts stay
+    O(log² total) like the bucketer's. Rows longer than
+    ``max_lengths[modality]`` are cropped exactly like ``Bucketer.fit``
+    (text keeps its head, vitals its tail). ``histogram`` counts packed
+    ``(modality, (R, T))`` shapes served.
+    """
+    align: int = 8
+    min_total: int = 8
+    min_rows: int = 1
+    max_lengths: Dict[str, int] = field(default_factory=dict)
+    histogram: Dict[tuple, int] = field(default_factory=dict)
+
+    def _crop(self, modality: str, x):
+        cap = self.max_lengths.get(modality)
+        if cap is not None and x.shape[1] > cap:
+            x = pad_axis(x, cap, axis=1,
+                         keep="head" if modality == "text" else "tail")
+        return x
+
+    def _layout(self, lengths, align: int):
+        offs, o = [], 0
+        for n in lengths:
+            offs.append(o)
+            if n:
+                o += -(-n // align) * align
+        total = o
+        T = max(self.min_total, next_pow2(max(total, 1)))
+        R = max(self.min_rows, next_pow2(max(len(lengths), 1)))
+        return offs, total, T, R
+
+    def _index_vectors(self, offs, lens, total, T, R):
+        import numpy as np
+        offsets = np.full((R,), total, np.int32)
+        lengths = np.zeros((R,), np.int32)
+        offsets[:len(offs)] = offs
+        lengths[:len(lens)] = lens
+        return offsets, lengths
+
+    def pack(self, modality: str, payloads):
+        """payloads: list of (1, S_i, ...) arrays (one per session row)."""
+        import numpy as np
+        rows = [self._crop(modality, p) for p in payloads]
+        lens = [int(r.shape[1]) for r in rows]
+        if modality == "text":
+            offs, total, T, R = self._layout(lens, self.align)
+            toks = np.zeros((1, T), np.int32)
+            seg = np.full((T,), -1, np.int32)
+            pos = np.zeros((T,), np.int32)
+            for i, (r, o, n) in enumerate(zip(rows, offs, lens)):
+                rv = np.asarray(r[0], np.int32)
+                toks[0, o:o + n] = rv
+                seg[o:o + n] = np.where(rv > 0, i, -1)
+                pos[o:o + n] = np.arange(n)
+            offsets, lengths = self._index_vectors(offs, lens, total, T, R)
+            self._count(modality, (R, T))
+            return {"tokens": jnp.asarray(toks),
+                    "row_ids": jnp.asarray(seg),
+                    "pos": jnp.asarray(pos),
+                    "offsets": jnp.asarray(offsets),
+                    "lengths": jnp.asarray(lengths)}
+        if modality == "vitals":
+            offs, total, T, R = self._layout(lens, 1)
+            n_feat = int(rows[0].shape[2])
+            x = np.zeros((1, T, n_feat), np.float32)
+            reset = np.zeros((T, 1, 1), bool)
+            for r, o, n in zip(rows, offs, lens):
+                if n:
+                    x[0, o:o + n] = np.asarray(r[0], np.float32)
+                    reset[o] = True
+            offsets, lengths = self._index_vectors(offs, lens, total, T, R)
+            self._count(modality, (R, T))
+            return {"x": jnp.asarray(x),
+                    "reset": jnp.asarray(reset),
+                    "offsets": jnp.asarray(offsets),
+                    "lengths": jnp.asarray(lengths)}
+        raise ValueError(f"RaggedBatch.pack: no ragged layout for "
+                         f"modality {modality!r} (fixed-size payloads "
+                         "stack on the batch axis instead)")
+
+    def _count(self, modality: str, shape):
+        key = (modality, shape)
+        self.histogram[key] = self.histogram.get(key, 0) + 1
+
+    def n_shapes(self) -> int:
+        return len(self.histogram)

@@ -25,6 +25,11 @@ class MultimodalModule:
     # hard per-modality input-length caps (e.g. a positional-embedding
     # table); the serving bucketer must never pad past these
     max_lengths: Dict[str, int] = field(default_factory=dict)
+    # encoded-feature widths per modality (the F_C slice layout) —
+    # what lets a serving engine zero-fill a missing modality's slice
+    # and run every subset tail through the FULL fusion heads in one
+    # grouped call; empty when the model doesn't declare them
+    feature_dims: Dict[str, int] = field(default_factory=dict)
 
     def full_fn(self):
         """The monolithic forward — what a conventional framework runs."""
@@ -58,6 +63,7 @@ def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModu
         payload_bytes={m: payload[m] for m in modalities},
         max_lengths=({"text": cfg.max_text_len} if "text" in modalities
                      else {}),
+        feature_dims={m: cfg.feature_dims[m] for m in modalities},
     )
 
 
@@ -92,6 +98,7 @@ def emsnet_subset_module(cfg, subset,
         payload_bytes={m: base.payload_bytes[m] for m in subset},
         max_lengths={m: n for m, n in base.max_lengths.items()
                      if m in subset},
+        feature_dims={m: base.feature_dims[m] for m in subset},
     )
 
 

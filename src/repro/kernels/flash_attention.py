@@ -34,8 +34,11 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, *refs,
             scale, causal, window, bq, bk, seq_k, n_kv_blocks, q_offset,
-            has_lengths):
-    if has_lengths:
+            has_lengths, has_segments):
+    if has_segments:
+        sq_ref, sk_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        len_ref = None
+    elif has_lengths:
         len_ref, o_ref, m_ref, l_ref, acc_ref = refs
     else:
         len_ref, (o_ref, m_ref, l_ref, acc_ref) = None, refs
@@ -53,14 +56,24 @@ def _kernel(q_ref, k_ref, v_ref, *refs,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    # kv padding: block padding, or the row's true key count
-    mask = k_pos < (len_ref[0, 0] if has_lengths else seq_k)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window:
-        mask &= q_pos - k_pos < window
+    if has_segments:
+        # ragged layout: a key is visible iff it belongs to the same row
+        # segment as the query; padding carries segment id -1 and is
+        # never equal to a valid id, so block/tail padding and foreign
+        # rows mask out identically. A fully-masked q row outputs 0.
+        sq = sq_ref[0]                                # (bq,) int32
+        sk = sk_ref[0]                                # (bk,) int32
+        mask = (sq[:, None] == sk[None, :]) & (sk[None, :] >= 0)
+    else:
+        q_pos = (q_offset + qi * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        # kv padding: block padding, or the row's true key count
+        mask = k_pos < (len_ref[0, 0] if has_lengths else seq_k)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= q_pos - k_pos < window
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -83,8 +96,8 @@ def _kernel(q_ref, k_ref, v_ref, *refs,
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
-                    kv_lengths=None, block_q=128, block_k=128,
-                    interpret=False):
+                    kv_lengths=None, segment_ids=None, block_q=128,
+                    block_k=128, interpret=False):
     """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv). Returns (B, Sq, H, Dv).
 
     ``kv_lengths``: optional (B,) int32 per-row key count — keys at
@@ -92,19 +105,37 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
     length-bucketed batches). A zero-length row outputs exactly 0.
     Non-causal only: the causal q/k alignment would need a per-row
     offset, which no caller needs yet.
+
+    ``segment_ids``: optional (B, S) int32 for the concatenated ragged
+    layout — many natural-length rows packed into one sequence. A query
+    attends a key iff their ids match; id -1 marks padding (between
+    aligned rows, and block-tail padding) and masks for every query, so
+    a -1 query row outputs exactly 0. Requires Sq == Sk and causal=False.
+    Unlike the other paths, block shapes are taken exactly as requested
+    (sequence padded up to a block multiple): fixed per-block reduction
+    shapes are what make a packed call bit-identical to per-row calls
+    whose rows start on block boundaries.
     """
-    if causal and kv_lengths is not None:
+    if causal and (kv_lengths is not None or segment_ids is not None):
         raise NotImplementedError(
-            "kv_lengths requires causal=False (per-row causal alignment "
-            "is not implemented)")
+            "kv_lengths/segment_ids require causal=False (per-row causal "
+            "alignment is not implemented)")
+    if kv_lengths is not None and segment_ids is not None:
+        raise ValueError("kv_lengths and segment_ids are mutually exclusive")
     B, Sq, H, D = q.shape
     _, Sk, KV, Dv = v.shape
+    if segment_ids is not None and Sq != Sk:
+        raise ValueError("segment_ids requires Sq == Sk (self-attention "
+                         "over one packed buffer)")
     G = H // KV
     if scale is None:
         scale = 1.0 / math.sqrt(D)
 
-    bq = min(block_q, Sq)
-    bk = min(block_k, Sk)
+    if segment_ids is not None:
+        bq, bk = block_q, block_k
+    else:
+        bq = min(block_q, Sq)
+        bk = min(block_k, Sk)
     pq = (-Sq) % bq
     pk = (-Sk) % bk
     qr = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, D)
@@ -124,7 +155,8 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
         seq_k=Sk, n_kv_blocks=nk, q_offset=(Sk - Sq) if causal else 0,
-        has_lengths=kv_lengths is not None)
+        has_lengths=kv_lengths is not None,
+        has_segments=segment_ids is not None)
 
     in_specs = [
         pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
@@ -132,7 +164,16 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
         pl.BlockSpec((1, bk, Dv), kv_index),
     ]
     operands = [qr, kr, vr]
-    if kv_lengths is not None:
+    if segment_ids is not None:
+        seg = segment_ids.astype(jnp.int32)
+        if pk:
+            seg = jnp.pad(seg, ((0, 0), (0, pk)), constant_values=-1)
+        # the same (B, S) id array feeds two views: the query block and
+        # the key block of each grid step
+        in_specs.append(pl.BlockSpec((1, bq), lambda bh, qi, ki: (bh // H, qi)))
+        in_specs.append(pl.BlockSpec((1, bk), lambda bh, qi, ki: (bh // H, ki)))
+        operands.extend([seg, seg])
+    elif kv_lengths is not None:
         # one (1, 1) scalar block per (batch, head) program
         lr = jnp.repeat(kv_lengths.astype(jnp.int32), H)[:, None]
         in_specs.append(pl.BlockSpec((1, 1), lambda bh, qi, ki: (bh, 0)))

@@ -185,6 +185,10 @@ def serve_unified(args):
     if args.chaos_seed >= 0 and args.outage_at >= 0:
         raise SystemExit("--chaos-seed conflicts with --outage-at; "
                          "pick one fault schedule")
+    if args.ragged and tiered:
+        raise SystemExit("--ragged requires a flush-mode spec (batch "
+                         "and/or stream); tiered places each arrival "
+                         "individually and never coalesces a flush")
 
     # the fault schedule is validated against the EPISODES (cheap to
     # build) before any model/profiling work happens
@@ -257,6 +261,8 @@ def serve_unified(args):
         kw["bucketer"] = Bucketer(max_buckets={"vitals": cfg.vitals_len,
                                                "text": cfg.max_text_len})
         kw["batch_bucket_min"] = min(8, n)
+        if args.ragged:
+            kw["ragged"] = True
 
     eng = build_engine(splits, params, "+".join(spec), max_history=None,
                        **kw)
@@ -306,6 +312,11 @@ def serve_unified(args):
         eps = {f"s{i}": table6()[1 + i % 3] for i in range(n)}
         eng.run_episodes(eps, payload_fn)
         _print_batch(eng, n)
+    if args.ragged:
+        pf = [f.padded_flop_frac for f in eng.flushes]
+        print(f"ragged flush: {eng.ragged.n_shapes()} packed shapes, "
+              f"mean padded-FLOP fraction "
+              f"{float(np.mean(pf)) if pf else 0.0:.3f}")
 
 
 def parse_spec_tokens(engine_arg: str):
@@ -364,6 +375,11 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="stream spec: coalesce arrivals within this "
                          "window before flushing (0 = flush per arrival)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="batch/stream specs: pack the pending rows of "
+                         "each variable-length modality into ONE "
+                         "concatenated ragged kernel call per flush and "
+                         "fuse all pending tails into ONE grouped call")
     ap.add_argument("--outage-at", type=float, default=-1.0, metavar="S",
                     help="tiered spec: kill the (fastest) remote tier at "
                          "episode second S (heartbeat-detected on-glass "

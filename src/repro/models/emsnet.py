@@ -55,16 +55,36 @@ def text_encoder_init(key, cfg: EMSNetConfig):
     }
 
 
-def _bert_block(p, x, mask, heads, *, flash=None):
+def _bert_block(p, x, mask, heads, *, flash=None, segments=None):
     """``flash=(kv_lengths, interpret)`` routes attention through the
     Pallas flash kernel (key-padding-masked, non-causal); None keeps the
-    materialized einsum path. Both see the same qkv/wo projections."""
+    materialized einsum path. Both see the same qkv/wo projections.
+
+    ``segments=(seg_ids, use_flash, block, interpret)`` is the ragged
+    layout: ``seg_ids`` (B, S) int32 gives each position's row id (-1 =
+    padding); a query attends a key iff their ids match. With
+    ``use_flash`` the segment-masked flash kernel runs at the fixed
+    ``block`` size (the bit-parity path); otherwise a materialized
+    pairwise mask feeds the einsum path."""
     B, S, d = x.shape
     hd = d // heads
     h = L.layernorm(p["ln1"], x)
     qkv = L.dense(p["wqkv"], h).reshape(B, S, 3, heads, hd)
     q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
-    if flash is not None:
+    if segments is not None:
+        seg, use_flash, block, interpret = segments
+        if use_flash:
+            from repro.kernels.flash_attention import flash_attention
+            att = flash_attention(q, k, v, causal=False, segment_ids=seg,
+                                  block_q=block, block_k=block,
+                                  interpret=interpret).reshape(B, S, d)
+        else:
+            pair = (seg[:, :, None] == seg[:, None, :]) & (seg >= 0)[:, None, :]
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+            s = jnp.where(pair[:, None], s, -1e30)
+            w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+            att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, d)
+    elif flash is not None:
         from repro.kernels.flash_attention import flash_attention
         kv_lengths, interpret = flash
         att = flash_attention(q, k, v, causal=False, kv_lengths=kv_lengths,
@@ -81,23 +101,80 @@ def _bert_block(p, x, mask, heads, *, flash=None):
 
 
 def text_encoder(p, cfg: EMSNetConfig, tokens):
-    """tokens: (B, S) int32, 0 = PAD. Returns F_T (B, d_text).
+    """tokens: (B, S) int32, 0 = PAD, or a ragged payload dict from
+    ``RaggedBatch.pack("text", ...)`` (keys tokens/row_ids/pos/offsets/
+    lengths). Returns F_T (B, d_text) — for the ragged form, one feature
+    row per packed row.
 
     The flash path assumes PAD-only suffixes (valid tokens first), which
     both the tokenizer layout and the bucketer's right-padding guarantee;
-    the einsum path handles arbitrary masks.
+    the einsum and segment paths handle arbitrary masks. With
+    ``cfg.flash_segments`` the natural path runs the segment-masked
+    flash kernel at ``cfg.flash_block`` — the bit-parity reference for
+    the ragged layout (same kernel, same block reduction shapes).
     """
+    if isinstance(tokens, dict):
+        return _text_encoder_ragged(p, cfg, tokens)
     _, d, heads, _ = cfg.text_dims
+    flash = segments = None
+    if cfg.use_flash_text and cfg.flash_segments:
+        # pad S to a flash_block multiple: every GEMM then has M >= block
+        # like the packed layout (an M=1 row would lower to a
+        # differently-accumulated matvec and break bit parity)
+        b = cfg.flash_block
+        Sp = -(-tokens.shape[1] // b) * b
+        tokens = jnp.pad(tokens, ((0, 0), (0, Sp - tokens.shape[1])))
+        mask = tokens > 0
+        seg = jnp.where(mask, 0, -1).astype(jnp.int32)
+        segments = (seg, True, b, cfg.flash_interpret)
+        pos = jnp.minimum(jnp.arange(Sp), cfg.max_text_len - 1)
+        x = L.embed(p["tok"], tokens) + p["pos"]["emb"][pos][None]
+        for blk in p["blocks"]:
+            x = _bert_block(blk, x, mask, heads, segments=segments)
+        x = L.layernorm(p["ln"], x)
+        m = mask[..., None].astype(x.dtype)
+        return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
     mask = tokens > 0
     S = tokens.shape[1]
-    flash = ((mask.sum(-1).astype(jnp.int32), cfg.flash_interpret)
-             if cfg.use_flash_text else None)
+    if cfg.use_flash_text:
+        flash = (mask.sum(-1).astype(jnp.int32), cfg.flash_interpret)
     x = L.embed(p["tok"], tokens) + p["pos"]["emb"][None, :S]
     for blk in p["blocks"]:
-        x = _bert_block(blk, x, mask, heads, flash=flash)
+        x = _bert_block(blk, x, mask, heads, flash=flash, segments=segments)
     x = L.layernorm(p["ln"], x)
     m = mask[..., None].astype(x.dtype)
     return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+
+
+def _text_encoder_ragged(p, cfg: EMSNetConfig, packed):
+    """Concatenated ragged text: ONE call encodes every pending row.
+
+    ``packed`` is ``RaggedBatch.pack("text", rows)``. Attention is
+    segment-masked (row ids from the pack), the positional table is
+    gathered at each position's within-row index, and pooling gathers a
+    ``max_text_len`` window at each row's offset — masked mean over
+    valid tokens exactly as the natural path. Gap/tail positions carry
+    id -1: they are masked as keys in every block and excluded from
+    pooling, so their (PAD-embedding) activations never reach a row's
+    feature."""
+    _, d, heads, _ = cfg.text_dims
+    toks = packed["tokens"]                         # (1, T)
+    seg = packed["row_ids"][None, :]                # (1, T)
+    T = toks.shape[1]
+    mask = seg >= 0
+    segments = (seg, cfg.use_flash_text, cfg.flash_block, cfg.flash_interpret)
+    x = L.embed(p["tok"], toks) + p["pos"]["emb"][packed["pos"]][None]
+    for blk in p["blocks"]:
+        x = _bert_block(blk, x, mask, heads, segments=segments)
+    x = L.layernorm(p["ln"], x)
+    offsets, lengths = packed["offsets"], packed["lengths"]
+    cap = min(cfg.max_text_len, T)
+    idx = jnp.clip(offsets[:, None] + jnp.arange(cap)[None, :], 0, T - 1)
+    xw = x[0][idx]                                  # (R, cap, d)
+    tw = toks[0][idx]
+    mw = ((jnp.arange(cap)[None, :] < lengths[:, None])
+          & (tw > 0))[..., None].astype(x.dtype)
+    return (xw * mw).sum(1) / jnp.maximum(mw.sum(1), 1.0)
 
 
 # ----------------------------------------------------------------------
@@ -115,18 +192,32 @@ def vitals_encoder_init(key, cfg: EMSNetConfig):
 
 
 def vitals_encoder(p, cfg: EMSNetConfig, vitals):
-    """vitals: (B, T, n_vitals) float, or a bucketed payload
+    """vitals: (B, T, n_vitals) float, a bucketed payload
     ``{"x": (B, T_b, n_vitals), "len": (B,) int32}`` (zero-padded to a
-    length bucket). Returns F_V (B, vitals_hidden). On padded steps the
-    recurrence freezes its carry, so the final state is bit-identical to
-    running the unpadded series."""
-    length = None
-    if isinstance(vitals, dict):
-        vitals, length = vitals["x"], vitals["len"]
-    B, T, _ = vitals.shape
+    length bucket), or a ragged payload from
+    ``RaggedBatch.pack("vitals", ...)`` (keys x/reset/offsets/lengths —
+    many series concatenated along time). Returns F_V (B, vitals_hidden);
+    for the ragged form, one feature row per packed row.
+
+    All three forms run ONE scan body: reset gate (zero the carry at a
+    packed row's first step), valid gate (freeze the carry on padded
+    steps), emit the hidden state. The natural path feeds constant
+    all-false/all-true gates through ``optimization_barrier`` so XLA
+    fuses the body identically across paths — that shared fusion is what
+    makes the ragged final states bit-identical to per-row runs."""
+    length = offsets = lengths = reset_in = None
+    if isinstance(vitals, dict) and "offsets" in vitals:
+        x = vitals["x"]
+        reset_in = vitals["reset"]
+        offsets, lengths = vitals["offsets"], vitals["lengths"]
+    elif isinstance(vitals, dict):
+        x, length = vitals["x"], vitals["len"]
+    else:
+        x = vitals
+    B, T, _ = x.shape
     h = cfg.vitals_hidden
     kind = cfg.vitals_encoder
-    x_proj = L.dense(p["wx"], vitals)               # (B, T, gates*h)
+    x_proj = L.dense(p["wx"], x)                     # (B, T, gates*h)
 
     def rnn_step(hc, xt):
         hp = hc
@@ -152,22 +243,35 @@ def vitals_encoder(p, cfg: EMSNetConfig, vitals):
         return (o * jnp.tanh(c), c), None
 
     xs = jnp.moveaxis(x_proj, 1, 0)                  # (T, B, gates*h)
-    h0 = jnp.zeros((B, h), vitals.dtype)
+    h0 = jnp.zeros((B, h), x.dtype)
     step = {"lstm": lstm_step, "gru": gru_step, "rnn": rnn_step}[kind]
     init = (h0, h0) if kind == "lstm" else h0
-    if length is None:
-        carry, _ = jax.lax.scan(step, init, xs)
-    else:
+
+    if offsets is not None:
+        # packed layout is B == 1; the carry crosses row boundaries but
+        # the reset gate zeroes it at each row's first step
+        reset = jnp.broadcast_to(reset_in, (T, B, 1))
+        valid = jax.lax.optimization_barrier(jnp.ones((T, B, 1), bool))
+    elif length is not None:
+        reset = jax.lax.optimization_barrier(jnp.zeros((T, B, 1), bool))
         valid = (jax.lax.broadcasted_iota(jnp.int32, (T, B, 1), 0)
                  < length[None, :, None])            # (T, B, 1)
+    else:
+        reset = jax.lax.optimization_barrier(jnp.zeros((T, B, 1), bool))
+        valid = jax.lax.optimization_barrier(jnp.ones((T, B, 1), bool))
 
-        def masked_step(carry, inp):
-            xt, vt = inp
-            new, _ = step(carry, xt)
-            return jax.tree.map(lambda n, o: jnp.where(vt, n, o),
-                                new, carry), None
+    def body(carry, inp):
+        xt, rt, vt = inp
+        c1 = jax.tree.map(lambda c: jnp.where(rt, jnp.zeros_like(c), c), carry)
+        new, _ = step(c1, xt)
+        out = jax.tree.map(lambda n_, c_: jnp.where(vt, n_, c_), new, c1)
+        return out, (out[0] if kind == "lstm" else out)
 
-        carry, _ = jax.lax.scan(masked_step, init, (xs, valid))
+    carry, ys = jax.lax.scan(body, init, (xs, reset, valid))
+    if offsets is not None:
+        idx = jnp.clip(offsets + lengths - 1, 0, T - 1)
+        hfin = ys[idx, 0]                            # (R, h)
+        return jnp.where((lengths > 0)[:, None], hfin, jnp.zeros_like(hfin))
     return carry[0] if kind == "lstm" else carry
 
 

@@ -9,6 +9,17 @@ factory:
 
   * ``BatchPolicy`` — shape-bucketed cross-session coalescing, one
     batched XLA call per (modality, bucket) per flush, one host sync;
+    ``ragged=True`` (default OFF) upgrades the flush to the
+    concatenated ragged layout: ``core.bucketing.RaggedBatch`` packs
+    every pending row of a variable-length modality into one buffer
+    (text at ``flash_block``-aligned offsets under the segment-masked
+    flash kernel; vitals back-to-back with per-row state resets), and
+    all pending fusion tails — across sessions AND modality subsets —
+    run as ONE grouped call through zero-filled full-set heads (subset
+    heads are row-slices of the full heads, and zero-filled K-slices
+    are bitwise inert in a GEMM). A flush then issues O(modalities)+1
+    kernels instead of O(modalities x buckets)+O(subsets), bit-parity
+    (atol 0) pinned against the unbucketed per-event reference;
   * ``StreamPolicy`` — progressive partial->final predictions, flush
     deadlines, cross-incident session eviction;
   * ``PlacementPolicy`` — N tier hosts on simulated clocks (the legacy

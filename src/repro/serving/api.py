@@ -72,8 +72,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.bucketing import Bucketer, next_pow2, stack_bucketed
+from repro.core.bucketing import (Bucketer, RaggedBatch, next_pow2,
+                                  stack_bucketed)
 from repro.core.episodes import Event, merge_arrivals
 from repro.core.feature_cache import FeatureCache
 from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
@@ -149,6 +151,17 @@ class FlushReport:
     latencies: Dict[Tuple[str, int], float]     # (sid, event idx) -> s
     predictions: List[Prediction] = field(default_factory=list)
     recommendations: Dict[str, dict] = field(default_factory=dict)
+    # padding-tax accounting: weighted position counts this flush's XLA
+    # calls spent on real data vs bucket/batch padding (weights are each
+    # submodule's parameter count — a MAC-proportional estimate, not a
+    # hardware FLOP counter)
+    flops_useful: float = 0.0
+    flops_padded: float = 0.0
+
+    @property
+    def padded_flop_frac(self) -> float:
+        total = self.flops_useful + self.flops_padded
+        return self.flops_padded / total if total else 0.0
 
 
 @dataclass
@@ -282,10 +295,26 @@ class BatchPolicy:
     positional table); pass an explicit :class:`Bucketer` to control the
     grid, or ``None`` to disable shape bucketing (tiered default).
     ``batch_bucket_min`` floors the coalesced batch axis so a steady
-    session count compiles ONE batch shape."""
+    session count compiles ONE batch shape.
+
+    ``ragged=True`` switches variable-length modalities (text, vitals)
+    from per-bucket stacked calls to the concatenated ragged layout
+    (``core.bucketing.RaggedBatch``): ONE encoder call per modality per
+    flush regardless of live length buckets, and ONE grouped fusion-tail
+    call across all pending sessions and modality subsets (possible
+    when the zoo shares one parameter pytree — ``share_encoders`` zoos;
+    engines with per-model parameters keep the per-model tail loop).
+    ``ragged_align`` must equal the model's text ``flash_block`` (packed
+    rows start on flash-block boundaries — the bit-parity requirement);
+    bit parity against the unbucketed reference additionally needs the
+    model config run with ``use_flash_text=True, flash_segments=True``
+    on both sides. Defaults OFF: the bucketed path stays the default
+    fast path."""
     bucketer: Union[Bucketer, None, str] = _AUTO
     max_coalesce: int = 64
     batch_bucket_min: int = 1
+    ragged: bool = False
+    ragged_align: int = 8
 
 
 @dataclass
@@ -435,6 +464,19 @@ class EMSServeEngine:
         self.bucketer: Optional[Bucketer] = bucketer
         self.max_coalesce = self.batch_policy.max_coalesce
         self.batch_bucket_min = self.batch_policy.batch_bucket_min
+        self.ragged: Optional[RaggedBatch] = None
+        if self.batch_policy.ragged:
+            limits: Dict[str, int] = {}
+            for sm in models.values():
+                for m, n in sm.module.max_lengths.items():
+                    limits[m] = min(limits.get(m, n), n)
+            self.ragged = RaggedBatch(
+                align=self.batch_policy.ragged_align,
+                min_rows=self.batch_policy.batch_bucket_min,
+                max_lengths=limits)
+        # per-(model, subtree) parameter counts, the flop-estimate
+        # weights for FlushReport's padding-tax accounting
+        self._flop_w: Dict[Tuple[str, str], float] = {}
 
         # ---- stream policy -> deadline / eviction state
         sp = stream
@@ -637,16 +679,223 @@ class EMSServeEngine:
 
     def _encode_groups(self, sids):
         """Dirty (session, modality) work grouped by identical
-        post-bucket shape: each group is one stacked encoder call."""
-        groups = defaultdict(list)     # (modality, shape) -> [(sid, payload)]
+        post-bucket shape: each group is one stacked encoder call.
+        Modalities no model consumes are skipped BEFORE the bucketer
+        sees them, so bucket/compile statistics count served groups
+        only (an unconsumed modality used to inflate the histogram the
+        bench reports)."""
+        groups = defaultdict(list)  # (modality, shape) -> [(sid, payload, nat)]
         for sid in sids:
             st = self.sessions[sid]
             for m in sorted(st.dirty):
+                if not self._consumers(m):
+                    continue
                 p = self._bucketed(m, st.inputs[m])
                 shape = (tuple(p["x"].shape) if isinstance(p, dict)
                          else tuple(p.shape))
-                groups[(m, shape)].append((st.sid, p))
+                groups[(m, shape)].append(
+                    (st.sid, p, self._nat_len(st.inputs[m])))
         return groups
+
+    @staticmethod
+    def _nat_len(x) -> int:
+        """Real (pre-padding) sequence length of a raw modality input:
+        axis 1 for (B, S, ...) payloads, 1 for fixed-size vectors."""
+        return int(x.shape[1]) if getattr(x, "ndim", 0) >= 2 else 1
+
+    def _weight(self, name: str, key: str) -> float:
+        """Parameter count of ``params[name][key]`` — the per-position
+        weight of the padding-tax estimate in :class:`FlushReport`
+        (1.0 when the subtree is not addressable)."""
+        k = (name, key)
+        w = self._flop_w.get(k)
+        if w is None:
+            p = self.params.get(name)
+            sub = p.get(key) if isinstance(p, dict) else None
+            w = float(sum(getattr(leaf, "size", 0)
+                          for leaf in jax.tree_util.tree_leaves(sub))) or 1.0
+            self._flop_w[k] = w
+        return w
+
+    def _run_encoder_chunk(self, m, sids, batch, upos, total_pos,
+                           sync_targets):
+        """Run every consuming model's encoder over one prepared batch
+        (stacked or packed), scatter rows into the feature cache, and
+        account the padding tax. Returns (n_calls, useful, padded)."""
+        runners = (self._consumers(m)[:1] if self.share_encoders
+                   else self._consumers(m))
+        n, useful, padded = 0, 0.0, 0.0
+        for name, sm in runners:
+            feats = sm.encoders[m](self.params[name], batch)
+            n += 1
+            w = self._weight(name, m)
+            useful += w * upos
+            padded += w * (total_pos - upos)
+            sync_targets.append(feats)
+            for i, sid in enumerate(sids):
+                st = self.sessions[sid]
+                self.cache.put(self._cache_key(sid, name), m,
+                               feats[i:i + 1], step=st.step, tier="glass")
+        return n, useful, padded
+
+    def _flush_encode(self, touched, sync_targets):
+        """Bucketed encode: one stacked call per (modality, bucket[,
+        chunk]) per consuming model."""
+        n_enc, useful, padded = 0, 0.0, 0.0
+        for (m, _shape), items in self._encode_groups(touched).items():
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                stacked = stack_bucketed([p for _, p, _ in chunk],
+                                         self._bucket_rows(len(chunk)))
+                lead = stacked["x"] if isinstance(stacked, dict) else stacked
+                plen = lead.shape[1] if lead.ndim >= 2 else 1
+                upos = sum(min(nat, plen) for _, _, nat in chunk)
+                c, u, pd = self._run_encoder_chunk(
+                    m, [sid for sid, _, _ in chunk], stacked, upos,
+                    lead.shape[0] * plen, sync_targets)
+                n_enc += c
+                useful += u
+                padded += pd
+        return n_enc, useful, padded
+
+    def _flush_encode_ragged(self, touched, sync_targets):
+        """Ragged encode: ONE packed call per variable-length modality
+        (per chunk, per consuming model) regardless of how many length
+        buckets are live; fixed-size modalities keep the stacked path."""
+        n_enc, useful, padded = 0, 0.0, 0.0
+        ragged_mods = defaultdict(list)      # m -> [(sid, raw, nat)]
+        fixed = defaultdict(list)            # (m, shape) -> [(sid, raw, nat)]
+        for sid in touched:
+            st = self.sessions[sid]
+            for m in sorted(st.dirty):
+                if not self._consumers(m):
+                    continue
+                x = st.inputs[m]
+                if m in ("text", "vitals"):
+                    ragged_mods[m].append((st.sid, x, self._nat_len(x)))
+                else:
+                    fixed[(m, tuple(x.shape))].append(
+                        (st.sid, x, self._nat_len(x)))
+        for m, items in sorted(ragged_mods.items()):
+            cap = self.ragged.max_lengths.get(m)
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                packed = self.ragged.pack(m, [x for _, x, _ in chunk])
+                total = (packed["tokens"] if m == "text"
+                         else packed["x"]).shape[1]
+                upos = sum(nat if cap is None else min(nat, cap)
+                           for _, _, nat in chunk)
+                c, u, pd = self._run_encoder_chunk(
+                    m, [sid for sid, _, _ in chunk], packed, upos, total,
+                    sync_targets)
+                n_enc += c
+                useful += u
+                padded += pd
+        for (m, _shape), items in sorted(fixed.items()):
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                stacked = stack_bucketed([x for _, x, _ in chunk],
+                                         self._bucket_rows(len(chunk)))
+                rows = (stacked["x"] if isinstance(stacked, dict)
+                        else stacked).shape[0]
+                c, u, pd = self._run_encoder_chunk(
+                    m, [sid for sid, _, _ in chunk], stacked, len(chunk),
+                    rows, sync_targets)
+                n_enc += c
+                useful += u
+                padded += pd
+        return n_enc, useful, padded
+
+    def _flush_tails(self, tail_groups, sync_targets):
+        """One batched tail call per selected model (per chunk)."""
+        n_tail, useful, padded = 0, 0.0, 0.0
+        emitted = []      # (sid, name, modalities, outputs, step)
+        for name, items in tail_groups.items():
+            sm = self.models[name]
+            mods = sm.modalities()
+            w = self._weight(name, "heads")
+            for c0 in range(0, len(items), self.max_coalesce):
+                chunk = items[c0:c0 + self.max_coalesce]
+                sids = [sid for sid, _ in chunk]
+                stacked = {mm: stack_bucketed([f[mm] for _, f in chunk],
+                                              self._bucket_rows(len(chunk)))
+                           for mm in mods}
+                outs = sm.tail(self.params[name], stacked)
+                n_tail += 1
+                rows = next(iter(stacked.values())).shape[0]
+                useful += w * len(chunk)
+                padded += w * (rows - len(chunk))
+                sync_targets.append(outs)
+                for i, sid in enumerate(sids):
+                    st = self.sessions[sid]
+                    row = jax.tree.map(lambda a: a[i:i + 1], outs)
+                    emitted.append((sid, name, tuple(mods), row, st.step))
+                    for mm in mods:   # the result carries the cache back
+                        self.cache.touch(self._cache_key(sid, name), mm,
+                                         st.step)
+        return n_tail, emitted, useful, padded
+
+    def _grouped_tail_target(self, tail_groups) -> Optional[str]:
+        """The ONE grouped tail is legal when a full-fusion model exists,
+        declares its feature widths, and every pending model shares its
+        parameter pytree (``share_encoders`` zoos): subset heads are
+        then row-slices of the full heads, so a zero-filled slice for a
+        missing modality contributes exactly zero to the fusion GEMM and
+        the full tail reproduces every subset tail bit-for-bit. Returns
+        the full model's name, or None to keep the per-model loop."""
+        full_name = next((n for n, sm in self.models.items()
+                          if frozenset(sm.modalities()) == self.full_set),
+                         None)
+        if full_name is None:
+            return None
+        dims = self.models[full_name].module.feature_dims
+        if not all(m in dims for m in self.full_set):
+            return None
+        if not all(self.params[n] is self.params[full_name]
+                   for n in tail_groups):
+            return None
+        return full_name
+
+    def _flush_tails_grouped(self, tail_groups, full_name, sync_targets):
+        """ONE stacked tail call for every pending (session, subset) —
+        flush then issues O(modalities) + 1 kernels instead of
+        O(modalities x buckets) + O(subsets). Each row is the full-width
+        F_C with zeros in the slices of modalities outside that row's
+        subset; the padding-tax account charges those zero slices as
+        padding."""
+        full_sm = self.models[full_name]
+        full_mods = full_sm.modalities()
+        dims = full_sm.module.feature_dims
+        fullw = float(sum(dims[m] for m in full_mods))
+        w = self._weight(full_name, "heads")
+        rows = [(sid, name, f)
+                for name, items in tail_groups.items()
+                for sid, f in items]
+        n_tail, useful, padded = 0, 0.0, 0.0
+        emitted = []
+        for c0 in range(0, len(rows), self.max_coalesce):
+            chunk = rows[c0:c0 + self.max_coalesce]
+            nb = self._bucket_rows(len(chunk))
+            stacked = {
+                m: stack_bucketed(
+                    [f.get(m, jnp.zeros((1, dims[m]), jnp.float32))
+                     for _, _, f in chunk], nb)
+                for m in full_mods}
+            outs = full_sm.tail(self.params[full_name], stacked)
+            n_tail += 1
+            sync_targets.append(outs)
+            subw = sum(sum(dims[m] for m in self.models[name].modalities())
+                       for _, name, _ in chunk) / fullw
+            useful += w * subw
+            padded += w * (nb - subw)
+            for i, (sid, name, _f) in enumerate(chunk):
+                st = self.sessions[sid]
+                row = jax.tree.map(lambda a: a[i:i + 1], outs)
+                mods = self.models[name].modalities()
+                emitted.append((sid, name, tuple(mods), row, st.step))
+                for mm in mods:
+                    self.cache.touch(self._cache_key(sid, name), mm, st.step)
+        return n_tail, emitted, useful, padded
 
     def flush(self) -> FlushReport:
         """Run all pending work: one batched encoder call per
@@ -659,7 +908,6 @@ class EMSServeEngine:
                 "flush() is a flush-mode operation; tiered placement "
                 "processes each arrival in submit()")
         t0 = self.time_fn()
-        n_enc = n_tail = 0
         sync_targets = []
         # every dirty marking comes with a _pending entry, so only the
         # pending sessions can have work — never scan the whole (ever-
@@ -667,25 +915,11 @@ class EMSServeEngine:
         touched = sorted({sid for sid, _, _ in self._pending})
 
         # ---- batched encode + scatter rows into the feature cache
-        for (m, _shape), items in self._encode_groups(touched).items():
-            consumers = self._consumers(m)
-            if not consumers:
-                continue
-            runners = consumers[:1] if self.share_encoders else consumers
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = stack_bucketed([p for _, p in chunk],
-                                         self._bucket_rows(len(chunk)))
-                for name, sm in runners:
-                    feats = sm.encoders[m](self.params[name], stacked)
-                    n_enc += 1
-                    sync_targets.append(feats)
-                    for i, sid in enumerate(sids):
-                        st = self.sessions[sid]
-                        self.cache.put(self._cache_key(sid, name), m,
-                                       feats[i:i + 1], step=st.step,
-                                       tier="glass")
+        if self.ragged is not None:
+            n_enc, enc_u, enc_p = self._flush_encode_ragged(touched,
+                                                            sync_targets)
+        else:
+            n_enc, enc_u, enc_p = self._flush_encode(touched, sync_targets)
 
         # ---- progressive re-fusion: batched tails per selected model
         tail_groups = defaultdict(list)    # model name -> [(sid, feats)]
@@ -704,26 +938,14 @@ class EMSServeEngine:
             if feats is not None:
                 tail_groups[name].append((st.sid, feats))
 
-        emitted = []      # (sid, name, modalities, outputs, step)
-        for name, items in tail_groups.items():
-            sm = self.models[name]
-            mods = sm.modalities()
-            for c0 in range(0, len(items), self.max_coalesce):
-                chunk = items[c0:c0 + self.max_coalesce]
-                sids = [sid for sid, _ in chunk]
-                stacked = {mm: stack_bucketed([f[mm] for _, f in chunk],
-                                              self._bucket_rows(len(chunk)))
-                           for mm in mods}
-                outs = sm.tail(self.params[name], stacked)
-                n_tail += 1
-                sync_targets.append(outs)
-                for i, sid in enumerate(sids):
-                    st = self.sessions[sid]
-                    row = jax.tree.map(lambda a: a[i:i + 1], outs)
-                    emitted.append((sid, name, tuple(mods), row, st.step))
-                    for mm in mods:   # the result carries the cache back
-                        self.cache.touch(self._cache_key(sid, name), mm,
-                                         st.step)
+        full_name = (self._grouped_tail_target(tail_groups)
+                     if self.ragged is not None and tail_groups else None)
+        if full_name is not None:
+            n_tail, emitted, tail_u, tail_p = self._flush_tails_grouped(
+                tail_groups, full_name, sync_targets)
+        else:
+            n_tail, emitted, tail_u, tail_p = self._flush_tails(
+                tail_groups, sync_targets)
 
         # ---- the ONE host sync of this flush
         jax.block_until_ready(sync_targets)
@@ -741,12 +963,19 @@ class EMSServeEngine:
             predictions.append(pred)
             recommendations[sid] = row
 
-        latencies = {(sid, idx): t1 - ts for sid, idx, ts in self._pending}
+        # keyed by arrival with the EARLIEST submit kept: a duplicate
+        # submission of the same (sid, idx) used to overwrite the first
+        # latency entry and double-count n_events
+        arrived: Dict[Tuple[str, int], float] = {}
+        for sid, idx, ts in self._pending:
+            arrived.setdefault((sid, idx), ts)
+        latencies = {key: t1 - ts for key, ts in arrived.items()}
         report = FlushReport(
-            flush_id=flush_id, n_events=len(self._pending),
+            flush_id=flush_id, n_events=len(arrived),
             n_encoder_calls=n_enc, n_tail_calls=n_tail, wall_s=t1 - t0,
             latencies=latencies, predictions=predictions,
-            recommendations=recommendations)
+            recommendations=recommendations,
+            flops_useful=enc_u + tail_u, flops_padded=enc_p + tail_p)
         self._pending.clear()
         self.flushes.append(report)
         if self.max_history is not None:
