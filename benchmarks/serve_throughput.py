@@ -34,6 +34,15 @@ vs O(modalities x buckets)+O(subsets) bucketed); (c) padded-FLOP
 fraction strictly below the bucketed baseline's on the same session
 mix. The legacy baseline/batched sections run exactly as before
 (ragged stays OFF there).
+
+Observability section (``result["obs_overhead"]``, gated by
+``passed_obs_overhead``): the same flush workload untraced (the
+disabled-tracer default — i.e. the legacy engine, byte-identical
+numbers) vs with a live ``repro.obs.Tracer`` recording every event's
+lifecycle; enabled tracing must cost < 5% wall regression and the
+resulting trace must replay cleanly through the invariant auditor.
+``result["metrics"]`` embeds the batched engine's full metrics
+registry snapshot.
 """
 from __future__ import annotations
 
@@ -184,6 +193,70 @@ def _ragged_section(n_sessions, n_ticks, seed=1):
     }
 
 
+def _obs_overhead_section(n_sessions, n_ticks, warmup_ticks, repeats=5):
+    """Traced-vs-untraced wall time on the SAME flush workload.
+
+    The disabled tracer (the default every legacy path runs with) is a
+    falsy no-op, so the untraced engine here IS the legacy engine. The
+    traced engine records the full per-event lifecycle; its in-memory
+    trace is replayed through the invariant auditor before timing is
+    even considered a pass. Min-of-N repeats on each side, plus a
+    small absolute slack so sub-100ms walls don't flap on scheduler
+    noise.
+    """
+    from repro.core import Bucketer
+    from repro.obs import Tracer, audit_tracer
+    from repro.serving.api import build_engine
+
+    cfg = C.emsnet_cfg(True)
+    splits, params = C.build_split_models(cfg)
+    eps, payloads = _episodes(n_sessions, n_ticks, cfg)
+    max_buckets = {"vitals": 8, "text": cfg.max_text_len}
+
+    def payload_fn(sid, ev):
+        return payloads[sid][ev.modality]
+
+    def one_run(tracer):
+        eng = build_engine(splits, params, "batch",
+                           bucketer=Bucketer(max_buckets=max_buckets),
+                           batch_bucket_min=min(8, n_sessions),
+                           max_history=None, tracer=tracer)
+
+        def tick(t):
+            for sid, events in eps.items():
+                if t < len(events):
+                    eng.submit(sid, events[t], payload_fn(sid, events[t]),
+                               aggregate=_aggregate)
+            eng.flush()
+
+        for t in range(warmup_ticks):
+            tick(t)
+        t0 = time.perf_counter()
+        for t in range(warmup_ticks, n_ticks):
+            tick(t)
+        return time.perf_counter() - t0, eng
+
+    one_run(None)                   # shared-XLA-cache warmup pass
+    untraced = min(one_run(None)[0] for _ in range(repeats))
+    traced, eng = min((one_run(Tracer()) for _ in range(repeats)),
+                      key=lambda we: we[0])
+    audit = audit_tracer(eng.tracer)
+    overhead = traced / untraced - 1.0
+    passed_wall = bool(traced <= untraced * 1.05 + 0.02)
+    return {
+        "repeats": repeats,
+        "untraced_wall_s": untraced,
+        "traced_wall_s": traced,
+        "overhead_frac": overhead,
+        "trace_events": len(eng.tracer.events),
+        "audit": {"ok": audit.ok, "violations": audit.violations[:5],
+                  "checks": audit.checks},
+        "passed_obs_wall": passed_wall,
+        "passed_obs_audit": bool(audit.ok),
+        "passed_obs_overhead": bool(passed_wall and audit.ok),
+    }
+
+
 def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
     from repro.core import Bucketer, EMSServe
     from repro.serving.api import build_engine
@@ -283,6 +356,11 @@ def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
     # ran with ragged OFF and are byte-for-byte what they always were)
     result["ragged"] = _ragged_section(n_sessions, n_ticks)
 
+    # ------- observability: registry snapshot + tracing overhead gate
+    result["metrics"] = beng.metrics_snapshot()
+    result["obs_overhead"] = _obs_overhead_section(
+        n_sessions, n_ticks, warmup_ticks)
+
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_serving.json").write_text(json.dumps(result, indent=2))
 
@@ -307,6 +385,18 @@ def run(quick=True, *, n_sessions=None, n_ticks=None, warmup_ticks=4):
         failed = [k for k, v in rg.items()
                   if k.startswith("passed_") and not v]
         raise SystemExit(f"ragged gates failed: {failed}")
+    obs = result["obs_overhead"]
+    C.csv_row("serve_obs_overhead", obs["overhead_frac"] * 1e6,
+              f"untraced_s={obs['untraced_wall_s']:.3f};"
+              f"traced_s={obs['traced_wall_s']:.3f};"
+              f"events={obs['trace_events']};"
+              f"audit_ok={obs['audit']['ok']}")
+    if not obs["passed_obs_overhead"]:
+        failed = [k for k, v in obs.items()
+                  if k.startswith("passed_") and not v]
+        raise SystemExit(f"obs overhead gates failed: {failed} "
+                         f"(overhead {obs['overhead_frac']:+.1%}, "
+                         f"audit {obs['audit']})")
     return result
 
 

@@ -189,6 +189,9 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
         "passed_ttfp_below_baseline_complete":
             ttfp_s["mean_ms"] < comp_s["mean_ms"]
             and all(ttfp[sid] < complete[sid] for sid in eps),
+        # full registry snapshot of the timed streaming engine
+        # (counters / gauges / p50-p95-p99 latency histograms)
+        "metrics": eng.metrics_snapshot(),
     }
 
     # the committed artifact is the QUICK-mode workload; a smoke run

@@ -533,6 +533,9 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
         result["chaos"]["finals_match_full_atol0"] and stale_ok
         and css["duplicate_commits"] == 0 and css["stale_commits"] == 0
         and chaos_eng.rejoin_count >= 1)
+    # full registry snapshot of the hardest run in the file (chaos
+    # schedule + speculation + re-dispatch over three tiers)
+    result["metrics"] = chaos_eng.metrics_snapshot()
     C.csv_row("tiered_chaos", chaos_eng.total_latency_s() * 1e6,
               f"events={len(sched)};rejoins={chaos_eng.rejoin_count};"
               f"redispatch={chaos_eng.redispatch_count};"

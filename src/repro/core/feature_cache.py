@@ -22,6 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
+from repro.obs import Metrics, Tracer
+
 
 @dataclass
 class CacheEntry:
@@ -37,13 +39,34 @@ class StalenessError(RuntimeError):
 
 
 class FeatureCache:
-    def __init__(self, max_staleness: int = 1):
+    def __init__(self, max_staleness: int = 1, *,
+                 metrics: Optional[Metrics] = None,
+                 tracer: Optional[Tracer] = None):
         self.max_staleness = max_staleness
         self._store: Dict[Tuple[str, str], CacheEntry] = {}
-        self.hits = 0
-        self.misses = 0
-        self.duplicate_commits = 0    # same-step re-commits (no-ops)
-        self.stale_commits = 0        # older-step late commits (refused)
+        # counters live on the (possibly shared) metrics registry; the
+        # historical attributes survive as read-through properties
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.tracer = tracer if tracer is not None else Tracer.disabled
+
+    # ---- legacy counter attributes (read-through to the registry)
+    @property
+    def hits(self) -> int:
+        return int(self.metrics.get("cache.hits"))
+
+    @property
+    def misses(self) -> int:
+        return int(self.metrics.get("cache.misses"))
+
+    @property
+    def duplicate_commits(self) -> int:
+        """Same-step re-commits (no-ops)."""
+        return int(self.metrics.get("cache.duplicate_commits"))
+
+    @property
+    def stale_commits(self) -> int:
+        """Older-step late commits (refused)."""
+        return int(self.metrics.get("cache.stale_commits"))
 
     def put(self, session: str, modality: str, feature, *, step: int,
             tier: str = "glass") -> bool:
@@ -59,14 +82,31 @@ class FeatureCache:
         prev = self._store.get(key)
         if prev is not None:
             if step < prev.step:
-                self.stale_commits += 1
+                self.metrics.inc("cache.stale_commits")
+                if self.tracer:
+                    self.tracer.instant(
+                        "cache.commit", "cache", track="cache",
+                        key=session, modality=modality, step=step,
+                        tier=tier, accepted=False, reason="stale")
                 return False
             if step == prev.step:
-                self.duplicate_commits += 1
+                self.metrics.inc("cache.duplicate_commits")
+                if self.tracer:
+                    self.tracer.instant(
+                        "cache.commit", "cache", track="cache",
+                        key=session, modality=modality, step=step,
+                        tier=tier, accepted=False, reason="duplicate")
                 return False
+        version = (prev.version + 1) if prev else 0
         self._store[key] = CacheEntry(
             feature=feature, step=step, tier=tier, modality=modality,
-            version=(prev.version + 1) if prev else 0)
+            version=version)
+        self.metrics.inc("cache.commits")
+        if self.tracer:
+            self.tracer.instant(
+                "cache.commit", "cache", track="cache", key=session,
+                modality=modality, step=step, tier=tier, accepted=True,
+                version=version)
         return True
 
     def get(self, session: str, modality: str, *,
@@ -78,14 +118,14 @@ class FeatureCache:
         (the slack covers an edge crash mid-recompute)."""
         entry = self._store.get((session, modality))
         if entry is None:
-            self.misses += 1
+            self.metrics.inc("cache.misses")
             return None
         if input_step is not None and input_step - entry.step > self.max_staleness:
             raise StalenessError(
                 f"cache for {modality} lags its input by "
                 f"{input_step - entry.step} steps (max {self.max_staleness}) "
                 "— fault-tolerance invariant broken")
-        self.hits += 1
+        self.metrics.inc("cache.hits")
         return entry
 
     def features(self, session: str, modalities, *, input_steps=None):
@@ -114,10 +154,19 @@ class FeatureCache:
         e = self._store.get((session, modality))
         if e is not None:
             e.step = step
+            if self.tracer:
+                self.tracer.instant("cache.touch", "cache", track="cache",
+                                    key=session, modality=modality,
+                                    step=step)
 
     def drop_tier(self, tier: str):
         """Invalidate entries held only by a crashed tier."""
+        dropped = [list(k) for k, v in self._store.items()
+                   if v.tier == tier]
         self._store = {k: v for k, v in self._store.items() if v.tier != tier}
+        if self.tracer and dropped:
+            self.tracer.instant("cache.drop", "cache", track="cache",
+                                scope="tier", tier=tier, dropped=dropped)
 
     def drop_session(self, session: str) -> int:
         """Evict every modality entry of one session key (cross-incident
@@ -125,6 +174,10 @@ class FeatureCache:
         keys = [k for k in self._store if k[0] == session]
         for k in keys:
             del self._store[k]
+        if self.tracer and keys:
+            self.tracer.instant("cache.drop", "cache", track="cache",
+                                scope="session", key=session,
+                                dropped=[list(k) for k in keys])
         return len(keys)
 
     def __contains__(self, key):

@@ -190,6 +190,11 @@ def serve_unified(args):
                          "and/or stream); tiered places each arrival "
                          "individually and never coalesces a flush")
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+
     # the fault schedule is validated against the EPISODES (cheap to
     # build) before any model/profiling work happens
     eps = (scenario_episodes(n, args.scenario) if tiered or stream
@@ -265,7 +270,7 @@ def serve_unified(args):
             kw["ragged"] = True
 
     eng = build_engine(splits, params, "+".join(spec), max_history=None,
-                       **kw)
+                       tracer=tracer, **kw)
 
     if tiered:
         if args.outage_at >= 0:
@@ -317,6 +322,14 @@ def serve_unified(args):
         print(f"ragged flush: {eng.ragged.n_shapes()} packed shapes, "
               f"mean padded-FLOP fraction "
               f"{float(np.mean(pf)) if pf else 0.0:.3f}")
+    if tracer is not None:
+        other = {"metrics": eng.metrics_snapshot()}
+        if tiered:
+            other["transport"] = eng.fabric.stats()
+        n_ev = tracer.export(args.trace, other_data=other)
+        print(f"trace: {n_ev} events -> {args.trace} "
+              f"(load in Perfetto: ui.perfetto.dev; audit: "
+              f"python -m repro.obs.audit {args.trace})")
 
 
 def parse_spec_tokens(engine_arg: str):
@@ -410,6 +423,11 @@ def main():
                     help="tiered spec with --tiers: seeded random "
                          "crash/rejoin schedule over the remote tiers "
                          "(repeated crash->re-dispatch->rejoin cycles)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="--engine specs: record every event's serving "
+                         "lifecycle with repro.obs.Tracer and export a "
+                         "Chrome trace-event JSON (Perfetto-loadable, "
+                         "auditable via python -m repro.obs.audit)")
     ap.add_argument("--wall-clock", action="store_true",
                     help="stream/tiered specs: replay arrivals and pump "
                          "deadline flushes from a monotonic clock")
@@ -424,6 +442,10 @@ def main():
                     help="deprecated: --engine tiered --sessions N")
     args = _apply_legacy_shims(ap.parse_args())
 
+    if args.trace and not args.engine:
+        raise SystemExit("--trace requires an --engine spec (the "
+                         "reference per-event engine predates the "
+                         "traced serving stack)")
     if args.engine:
         serve_unified(args)
         return

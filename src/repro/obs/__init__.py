@@ -1,0 +1,24 @@
+"""Unified serving observability: tracing, metrics, trace-replay audit.
+
+Three surfaces, all defaulting OFF so historical timelines and BENCH
+numbers regenerate bit-identically:
+
+  * ``trace.Tracer`` — structured span tracer on the injected serving
+    clock; records every arrival's full lifecycle plus speculation /
+    chaos annotations; Chrome trace-event (Perfetto-loadable) JSON
+    export, byte-reproducible under the deterministic clock.
+    ``Tracer.disabled`` is the falsy no-op default.
+  * ``metrics.Metrics`` — registry of counters / gauges / histograms
+    with a DDSketch-style streaming quantile sketch (p50/p95/p99);
+    one ``snapshot()``/``reset()`` API absorbing the stack's formerly
+    ad hoc counters.
+  * ``audit`` — trace-replay auditor re-verifying the serving
+    invariants from a trace alone (``python -m repro.obs.audit``).
+
+This package imports nothing from ``core`` or ``serving`` (no jax), so
+any layer may depend on it.
+"""
+from .audit import (AuditReport, audit_doc, audit_file,  # noqa: F401
+                    audit_tracer, validate_chrome)
+from .metrics import Metrics, QuantileSketch  # noqa: F401
+from .trace import Tracer, TraceEvent  # noqa: F401

@@ -1,0 +1,209 @@
+"""Metrics registry: counters, gauges, and streaming quantile sketches.
+
+One ``Metrics`` object is the single accounting surface for a serving
+stack: the engine, its ``FeatureCache``, and every ``TransportChannel``
+share the registry, so the ad hoc per-object counters that used to be
+scattered across the stack (``duplicate_commits``, ``cancelled_bytes``,
+placement tallies, ...) become names in one flat namespace with one
+``snapshot()``/``reset()`` API.  The legacy attributes survive as
+read-through properties on their original owners.
+
+``QuantileSketch`` is a DDSketch-style log-bucketed quantile sketch:
+
+  * deterministic — bucket index is ``ceil(log_gamma(v))``; no sampling,
+    no randomness, insertion-order independent;
+  * relative-error bounded — any reported quantile ``q̂`` satisfies
+    ``|q̂ - q| <= rel_err * q`` against the true sample quantile;
+  * exactly mergeable — ``a.merge(b)`` adds bucket counts, so merging
+    is associative and commutative on the bucket state (the float
+    running ``sum`` is the only approximately-associative field).
+
+Nothing in this module imports jax or the serving stack; it is safe to
+use from any layer (including ``core``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional
+
+__all__ = ["QuantileSketch", "Metrics"]
+
+# values below this land in the exact zero bucket (log would diverge)
+_ZERO_EPS = 1e-12
+
+
+class QuantileSketch:
+    """DDSketch-style streaming quantile sketch for non-negative values."""
+
+    __slots__ = ("rel_err", "_gamma", "_log_gamma", "_buckets", "_zero",
+                 "_count", "_sum", "_min", "_max")
+
+    def __init__(self, rel_err: float = 0.01):
+        if not 0.0 < rel_err < 1.0:
+            raise ValueError(f"rel_err must be in (0, 1), got {rel_err}")
+        self.rel_err = rel_err
+        self._gamma = (1.0 + rel_err) / (1.0 - rel_err)
+        self._log_gamma = math.log(self._gamma)
+        self._buckets: Dict[int, int] = {}
+        self._zero = 0
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    # ---- ingest -----------------------------------------------------
+    def add(self, value: float) -> None:
+        v = float(value)
+        if not math.isfinite(v) or v < 0.0:
+            raise ValueError(f"QuantileSketch.add: need finite v >= 0, got {value}")
+        if v < _ZERO_EPS:
+            self._zero += 1
+        else:
+            i = math.ceil(math.log(v) / self._log_gamma)
+            self._buckets[i] = self._buckets.get(i, 0) + 1
+        self._count += 1
+        self._sum += v
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
+
+    def merge(self, other: "QuantileSketch") -> "QuantileSketch":
+        """Return a NEW sketch holding both inputs' samples."""
+        if not isinstance(other, QuantileSketch):
+            raise TypeError("can only merge QuantileSketch with QuantileSketch")
+        if other.rel_err != self.rel_err:
+            raise ValueError("cannot merge sketches with different rel_err")
+        out = QuantileSketch(self.rel_err)
+        out._buckets = dict(self._buckets)
+        for i, n in other._buckets.items():
+            out._buckets[i] = out._buckets.get(i, 0) + n
+        out._zero = self._zero + other._zero
+        out._count = self._count + other._count
+        out._sum = self._sum + other._sum
+        out._min = min(self._min, other._min)
+        out._max = max(self._max, other._max)
+        return out
+
+    # ---- read -------------------------------------------------------
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def min(self) -> Optional[float]:
+        return None if self._count == 0 else self._min
+
+    @property
+    def max(self) -> Optional[float]:
+        return None if self._count == 0 else self._max
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Value within ``rel_err`` (relative) of the true q-quantile.
+
+        The true q-quantile here is ``sorted(samples)[floor(q*(n-1))]``.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        if self._count == 0:
+            return None
+        rank = int(math.floor(q * (self._count - 1)))  # 0-indexed target
+        cum = self._zero
+        if cum > rank:
+            return 0.0
+        for i in sorted(self._buckets):
+            cum += self._buckets[i]
+            if cum > rank:
+                mid = 2.0 * self._gamma ** i / (self._gamma + 1.0)
+                # clamping toward the observed range never leaves the
+                # error bound: the true quantile lies inside [min, max]
+                return min(max(mid, self._min), self._max)
+        return self._max  # unreachable unless float slop; safe answer
+
+    def state(self):
+        """Exact mergeable state (for associativity checks / equality)."""
+        return (tuple(sorted(self._buckets.items())), self._zero,
+                self._count, self._min, self._max)
+
+    def summary(self) -> dict:
+        if self._count == 0:
+            return {"count": 0}
+        return {
+            "count": self._count,
+            "sum": self._sum,
+            "mean": self._sum / self._count,
+            "min": self._min,
+            "max": self._max,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"QuantileSketch(count={self._count}, "
+                f"buckets={len(self._buckets)}, rel_err={self.rel_err})")
+
+
+class Metrics:
+    """Registry of named counters, gauges, and quantile histograms.
+
+    * counters — monotonically accumulated floats (``inc``); read with
+      ``get`` (0.0 when never incremented).
+    * gauges — last-write-wins values (``set_gauge``), or lazily
+      evaluated callables (``gauge_fn``) sampled at ``snapshot()`` time.
+    * histograms — ``QuantileSketch`` per name (``observe``).
+
+    ``snapshot()`` returns one JSON-serializable dict with sorted keys;
+    ``reset()`` zeroes counters and histogram contents but keeps gauge
+    registrations (callable gauges describe live state, not history).
+    """
+
+    def __init__(self, *, rel_err: float = 0.01):
+        self.rel_err = rel_err
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._gauge_fns: Dict[str, Callable[[], float]] = {}
+        self._hists: Dict[str, QuantileSketch] = {}
+
+    # ---- counters ---------------------------------------------------
+    def inc(self, name: str, value: float = 1) -> None:
+        self._counters[name] = self._counters.get(name, 0) + value
+
+    def get(self, name: str, default: float = 0) -> float:
+        return self._counters.get(name, default)
+
+    # ---- gauges -----------------------------------------------------
+    def set_gauge(self, name: str, value: float) -> None:
+        self._gauges[name] = value
+
+    def gauge_fn(self, name: str, fn: Callable[[], float]) -> None:
+        self._gauge_fns[name] = fn
+
+    # ---- histograms -------------------------------------------------
+    def observe(self, name: str, value: float) -> None:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = QuantileSketch(self.rel_err)
+        h.add(value)
+
+    def histogram(self, name: str) -> Optional[QuantileSketch]:
+        return self._hists.get(name)
+
+    # ---- lifecycle --------------------------------------------------
+    def snapshot(self) -> dict:
+        gauges = dict(self._gauges)
+        for name, fn in self._gauge_fns.items():
+            gauges[name] = fn()
+        return {
+            "counters": {k: self._counters[k] for k in sorted(self._counters)},
+            "gauges": {k: gauges[k] for k in sorted(gauges)},
+            "histograms": {k: self._hists[k].summary()
+                           for k in sorted(self._hists)},
+        }
+
+    def reset(self) -> None:
+        self._counters.clear()
+        self._gauges.clear()
+        self._hists.clear()

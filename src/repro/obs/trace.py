@@ -1,0 +1,163 @@
+"""Structured span tracer on the injected serving clock.
+
+``Tracer`` records the full lifecycle of every arrival the serving
+stack handles — arrival, flush-queue wait, encode@tier compute spans,
+uplink/downlink transport flights by flight id, tail fusion, cache
+commits, partial/final prediction emits — plus the speculation and
+chaos annotations (race start/win, cancel, crash detect, redispatch,
+rejoin, evict).  Timestamps come from whatever clock the engine runs
+on: the simulated per-tier episode clock in tiered mode (``set_time``
+is called at each arrival), or the wall ``time_fn`` in flush mode
+(``clock`` attribute).
+
+Determinism: every event carries a monotone per-tracer sequence number,
+and export stable-sorts by ``(ts, seq)`` and serializes with sorted
+keys — so under the deterministic simulated clock the exported trace
+file is byte-reproducible.  The sequence number is also the program-
+order causality signal the trace-replay auditor (``obs.audit``) relies
+on, since in tiered mode distinct hosts' spans legitimately overlap in
+simulated time.
+
+Export is Chrome trace-event format (the JSON object form), directly
+loadable in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``:
+``ph="X"`` complete spans, ``ph="i"`` instants, ``ph="M"`` metadata
+naming each track.  Track ids are assigned from the sorted set of
+track names so they never depend on event arrival order.
+
+``Tracer.disabled`` is a shared no-op singleton that is falsy, so hot
+paths guard instrumentation with ``if self.tracer:`` and pay one
+branch when tracing is off.
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, List, Optional
+
+__all__ = ["Tracer", "TraceEvent"]
+
+
+class TraceEvent:
+    """One recorded event (a span when ``dur`` is not None)."""
+
+    __slots__ = ("name", "cat", "ts", "dur", "track", "args", "seq")
+
+    def __init__(self, name, cat, ts, dur, track, args, seq):
+        self.name = name
+        self.cat = cat
+        self.ts = float(ts)
+        self.dur = None if dur is None else float(dur)
+        self.track = track
+        self.args = args
+        self.seq = seq
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        kind = "span" if self.dur is not None else "instant"
+        return (f"TraceEvent({self.name!r}, {kind}, t={self.ts:.6f}, "
+                f"track={self.track!r}, seq={self.seq})")
+
+
+class Tracer:
+    """Append-only event recorder with deterministic Chrome export."""
+
+    disabled: "Tracer"  # assigned below (a _DisabledTracer singleton)
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.events: List[TraceEvent] = []
+        self.clock = clock       # wall-mode default timestamp source
+        self._now = 0.0          # simulated-mode default timestamp
+        self._seq = 0
+
+    def __bool__(self) -> bool:
+        return True
+
+    # ---- clocks -----------------------------------------------------
+    def set_time(self, t: float) -> None:
+        """Advance the simulated-clock default timestamp."""
+        self._now = float(t)
+
+    def now(self) -> float:
+        return self.clock() if self.clock is not None else self._now
+
+    # ---- record -----------------------------------------------------
+    def span(self, name: str, cat: str, t0: float, t1: float, *,
+             track: str = "engine", **args) -> None:
+        """Record a complete span [t0, t1] on ``track``."""
+        self._seq += 1
+        self.events.append(TraceEvent(name, cat, t0, max(0.0, t1 - t0),
+                                      track, args, self._seq))
+
+    def instant(self, name: str, cat: str, at: Optional[float] = None, *,
+                track: str = "engine", **args) -> None:
+        """Record a point event at ``at`` (default: the tracer clock).
+
+        The parameter is named ``at`` (not ``t``) so callers can carry
+        a ``t=...`` field in the event args without a collision."""
+        self._seq += 1
+        ts = self.now() if at is None else at
+        self.events.append(TraceEvent(name, cat, ts, None, track,
+                                      args, self._seq))
+
+    def clear(self) -> None:
+        self.events.clear()
+        self._seq = 0
+        self._now = 0.0
+
+    # ---- export -----------------------------------------------------
+    def to_chrome(self, other_data: Optional[dict] = None) -> dict:
+        """Chrome trace-event JSON object (Perfetto-loadable)."""
+        tracks = sorted({e.track for e in self.events})
+        tids = {name: i + 1 for i, name in enumerate(tracks)}
+        out = [{"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+                "ts": 0, "args": {"name": "EMSServe"}}]
+        for name, tid in tids.items():
+            out.append({"ph": "M", "name": "thread_name", "pid": 1,
+                        "tid": tid, "ts": 0, "args": {"name": name}})
+        for e in sorted(self.events, key=lambda e: (e.ts, e.seq)):
+            ev = {
+                "name": e.name,
+                "cat": e.cat,
+                "ph": "X" if e.dur is not None else "i",
+                "ts": round(e.ts * 1e6, 3),       # seconds -> microseconds
+                "pid": 1,
+                "tid": tids[e.track],
+                "args": {**e.args, "seq": e.seq},
+            }
+            if e.dur is not None:
+                ev["dur"] = round(e.dur * 1e6, 3)
+            else:
+                ev["s"] = "t"                      # instant scope: thread
+            out.append(ev)
+        doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+        if other_data:
+            doc["otherData"] = other_data
+        return doc
+
+    def export(self, path, other_data: Optional[dict] = None) -> int:
+        """Write the Chrome trace JSON to ``path``; returns event count.
+
+        Serialization is canonical (sorted keys, no whitespace), so two
+        identical event streams produce byte-identical files.
+        """
+        doc = self.to_chrome(other_data)
+        with open(path, "w") as f:
+            json.dump(doc, f, sort_keys=True, separators=(",", ":"))
+        return len(self.events)
+
+
+class _DisabledTracer(Tracer):
+    """Falsy no-op tracer: the default wiring for every engine."""
+
+    def __bool__(self) -> bool:
+        return False
+
+    def set_time(self, t: float) -> None:
+        pass
+
+    def span(self, *a, **kw) -> None:
+        pass
+
+    def instant(self, *a, **kw) -> None:
+        pass
+
+
+Tracer.disabled = _DisabledTracer()

@@ -49,6 +49,23 @@ the best surviving remote; ``chaos`` generates seeded, validated
 crash/rejoin schedules that ``inject_schedule`` replays. All of it
 defaults OFF — historical timelines never race.
 
+Observability (``repro.obs``, defaults OFF): every engine carries a
+``Metrics`` registry — the stack's formerly ad hoc counters
+(``duplicate_commits``, ``cancelled_bytes``, placement tallies, ...)
+are names in its one flat namespace, the historical attributes
+surviving as read-through properties, plus p50/p95/p99 latency
+histograms behind ``EMSServeEngine.metrics_snapshot()``. Passing
+``build_engine(..., tracer=repro.obs.Tracer())`` (or ``--trace PATH``
+on the launcher) records every arrival's full lifecycle — arrival,
+queue wait, encode@tier compute spans, transport flights by flight id,
+fuse, cache commit, partial/final emit, and the race/cancel/crash/
+redispatch/rejoin annotations — as Chrome trace-event JSON loadable in
+Perfetto; the default ``Tracer.disabled`` is a falsy no-op, so untraced
+runs regenerate bit-identically. ``python -m repro.obs.audit`` replays
+an exported trace and re-verifies the serving invariants (exactly-one
+commit, <=1-step staleness, byte conservation incl. cancelled flights,
+no emit before its inputs) from the file alone.
+
 Historical constructors remain as thin shims over the same engine:
 
   * ``batch_engine.BatchedEMSServe`` — the ``"batch"`` construction;

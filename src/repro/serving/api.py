@@ -82,6 +82,7 @@ from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
                                 MultiTierPolicy, ProfileTable, TierDecision,
                                 SpeculationPolicy)
 from repro.core.splitter import SplitModel, select_model
+from repro.obs import Metrics, Tracer
 from repro.serving.transport import TierFabric, payload_nbytes
 
 __all__ = [
@@ -199,11 +200,17 @@ class TierHost:
     free_at: float = 0.0
     busy_s: float = 0.0
     calls: int = 0
+    tracer: Optional[Tracer] = None
+
+    def __post_init__(self):
+        if self.tracer is None:
+            self.tracer = Tracer.disabled
 
     def time(self, submodule: str) -> float:
         return self.profile.time(submodule, self.tier)
 
-    def occupy(self, duration: float, t_start: float) -> Tuple[float, float]:
+    def occupy(self, duration: float, t_start: float,
+               label: Optional[str] = None) -> Tuple[float, float]:
         """Book ``duration`` seconds of compute no earlier than
         ``t_start``; returns (start, done) on the simulated clock."""
         start = max(t_start, self.free_at)
@@ -211,6 +218,10 @@ class TierHost:
         self.free_at = done
         self.busy_s += duration
         self.calls += 1
+        if self.tracer:
+            self.tracer.span(label or f"compute@{self.name}", "compute",
+                             start, done, track=f"host:{self.name}",
+                             host=self.name, queued_s=start - t_start)
         return start, done
 
     def release(self, start: float, done: float, t: float):
@@ -225,6 +236,10 @@ class TierHost:
         cut = max(start, min(t, done))
         self.busy_s -= done - cut
         self.free_at = cut
+        if self.tracer:
+            self.tracer.instant("host.release", "speculation", t,
+                                track=f"host:{self.name}", host=self.name,
+                                freed_s=done - cut)
 
 
 @dataclass
@@ -444,7 +459,8 @@ class EMSServeEngine:
                  placement: Optional[PlacementPolicy] = None,
                  share_encoders: bool = False,
                  max_history: Optional[int] = 256,
-                 time_fn: Callable[[], float] = time.perf_counter):
+                 time_fn: Callable[[], float] = time.perf_counter,
+                 tracer: Optional[Tracer] = None):
         self.models = models
         self.params = params
         self.batch_policy = batch or BatchPolicy()
@@ -453,6 +469,22 @@ class EMSServeEngine:
         self.share_encoders = share_encoders
         self.max_history = max_history
         self.time_fn = time_fn
+
+        # ---- observability: one metrics registry for the whole stack
+        # (engine + cache + transport), and a span tracer defaulting to
+        # the falsy no-op so historical timelines replay bit-identically
+        self.metrics = Metrics()
+        self.tracer = tracer if tracer is not None else Tracer.disabled
+        if self.tracer and placement is None and self.tracer.clock is None:
+            # flush-mode engines run on the injected wall clock; tiered
+            # engines call set_time() at each simulated-clock arrival
+            self.tracer.clock = self.time_fn
+        self.metrics.gauge_fn("engine.sessions_live",
+                              lambda: len(self.sessions))
+        self.metrics.gauge_fn("cache.entries", lambda: len(self.cache))
+        # source-step metadata of the most recent _gather, consumed by
+        # the fuse trace point (tracer-gated; {} when tracing is off)
+        self._last_consumed: dict = {}
 
         # ---- batch policy -> coalescing state
         bucketer = self.batch_policy.bucketer
@@ -487,13 +519,13 @@ class EMSServeEngine:
                                    and placement is not None)
 
         # ---- shared session/cache state
-        self.cache = FeatureCache(max_staleness=1)
+        self.cache = FeatureCache(max_staleness=1, metrics=self.metrics,
+                                  tracer=self.tracer)
         self.sessions: Dict[str, SessionView] = {}
         # every modality ANY model consumes: a prediction fusing all of
         # them cannot be refined further -> tagged "final"
         self.full_set = frozenset(m for sm in models.values()
                                   for m in sm.modalities())
-        self.evicted_count = 0
         self._pending: List[Tuple[str, int, float]] = []  # (sid, idx, t_submit)
         self.flushes: List[FlushReport] = []              # bounded window
         self.events_total = 0
@@ -516,7 +548,8 @@ class EMSServeEngine:
                                  "plus at least one remote tier")
             self.local_name = names[0]
             self.hosts: Dict[str, TierHost] = {
-                n: TierHost(n, k, pp.profile) for n, k in zip(names, keys)}
+                n: TierHost(n, k, pp.profile, tracer=self.tracer)
+                for n, k in zip(names, keys)}
             self.remote_names = names[1:]
             traces = {n: (pp.tier_traces or {}).get(n, pp.trace)
                       for n in self.remote_names}
@@ -524,7 +557,9 @@ class EMSServeEngine:
                                                  period=pp.hb_period)
                              for n in self.remote_names}
             self.fabric = TierFabric(self.local_name, traces,
-                                     latency_s=pp.link_latency_s)
+                                     latency_s=pp.link_latency_s,
+                                     metrics=self.metrics,
+                                     tracer=self.tracer)
             self.policy = MultiTierPolicy(
                 pp.profile, self.monitors, local=self.local_name,
                 tier_of={n: h.tier for n, h in self.hosts.items()},
@@ -555,18 +590,64 @@ class EMSServeEngine:
             self._faults: Dict[str, _TierFault] = {
                 n: _TierFault() for n in self.remote_names}
             self._schedule: Dict[str, deque] = {}
-            self.fallback_count = 0
-            self.rejoin_count = 0
-            self.offloaded_count = 0
-            self.on_glass_count = 0
-            self.place_counts: Dict[str, int] = {n: 0 for n in names}
-            self.tail_counts: Dict[str, int] = {n: 0 for n in names}
+            # placement / speculation tallies live on the metrics
+            # registry; the historical attributes are read-through
+            # properties (below) keyed off the host-name list
+            self._host_names = list(names)
             self._total_latency = 0.0
-            # speculative dual placement / mid-flight re-dispatch
-            self.spec_count = 0
-            self.spec_wins: Dict[str, int] = {n: 0 for n in names}
-            self.spec_crash_saves = 0
-            self.redispatch_count = 0
+
+    # ---- legacy counter attributes (read-through to the registry)
+    @property
+    def evicted_count(self) -> int:
+        return int(self.metrics.get("engine.evicted_sessions"))
+
+    @property
+    def fallback_count(self) -> int:
+        return int(self.metrics.get("placement.fallbacks"))
+
+    @property
+    def rejoin_count(self) -> int:
+        return int(self.metrics.get("placement.rejoins"))
+
+    @property
+    def offloaded_count(self) -> int:
+        return int(self.metrics.get("placement.offloaded"))
+
+    @property
+    def on_glass_count(self) -> int:
+        return int(self.metrics.get("placement.on_glass"))
+
+    @property
+    def place_counts(self) -> Dict[str, int]:
+        return {n: int(self.metrics.get(f"placement.enc.{n}"))
+                for n in self._host_names}
+
+    @property
+    def tail_counts(self) -> Dict[str, int]:
+        return {n: int(self.metrics.get(f"placement.tail.{n}"))
+                for n in self._host_names}
+
+    @property
+    def spec_count(self) -> int:
+        return int(self.metrics.get("speculation.races"))
+
+    @property
+    def spec_wins(self) -> Dict[str, int]:
+        return {n: int(self.metrics.get(f"speculation.wins.{n}"))
+                for n in self._host_names}
+
+    @property
+    def spec_crash_saves(self) -> int:
+        return int(self.metrics.get("speculation.crash_saves"))
+
+    @property
+    def redispatch_count(self) -> int:
+        return int(self.metrics.get("placement.redispatches"))
+
+    def metrics_snapshot(self) -> dict:
+        """One JSON-serializable snapshot of every counter, gauge, and
+        latency histogram (p50/p95/p99) the stack accumulated."""
+        return self.metrics.snapshot()
 
     # ------------------------------------------------------------ setup
 
@@ -615,6 +696,11 @@ class EMSServeEngine:
         st.t_last_activity = now
         if st.t_first_submit is None:
             st.t_first_submit = now
+        if self.tracer:
+            self.tracer.instant("arrival", "arrival", now,
+                                track=f"session:{sid}", sid=sid,
+                                index=event.index,
+                                modality=event.modality, step=st.step)
         self._pending.append((sid, event.index, now))
         if self.deadline_s is None:
             return None
@@ -923,6 +1009,7 @@ class EMSServeEngine:
 
         # ---- progressive re-fusion: batched tails per selected model
         tail_groups = defaultdict(list)    # model name -> [(sid, feats)]
+        consumed_meta: Dict[Tuple[str, str], dict] = {}
         for sid in touched:
             st = self.sessions[sid]
             if not st.dirty:
@@ -937,6 +1024,14 @@ class EMSServeEngine:
                                         input_steps=st.input_step)
             if feats is not None:
                 tail_groups[name].append((st.sid, feats))
+                if self.tracer:
+                    # snapshot source steps BEFORE the tail path
+                    # re-stamps them via cache.touch
+                    key = self._cache_key(st.sid, name)
+                    consumed_meta[(st.sid, name)] = {
+                        m: [self.cache.peek(key, m).step,
+                            st.input_step.get(m, 0)]
+                        for m in sm.modalities()}
 
         full_name = (self._grouped_tail_target(tail_groups)
                      if self.ragged is not None and tail_groups else None)
@@ -962,6 +1057,16 @@ class EMSServeEngine:
             self._record_prediction(st, pred)
             predictions.append(pred)
             recommendations[sid] = row
+            if self.tracer:
+                key = self._cache_key(sid, name)
+                self.tracer.instant(
+                    "fuse", "fusion", t1, track=f"session:{sid}",
+                    sid=sid, key=key, model=name, step=step,
+                    consumed=consumed_meta.get((sid, name), {}))
+                self.tracer.instant(
+                    "emit", "predict", t1, track=f"session:{sid}",
+                    sid=sid, key=key, model=name, step=step, kind=kind,
+                    modalities=sorted(mods))
 
         # keyed by arrival with the EARLIEST submit kept: a duplicate
         # submission of the same (sid, idx) used to overwrite the first
@@ -976,6 +1081,19 @@ class EMSServeEngine:
             latencies=latencies, predictions=predictions,
             recommendations=recommendations,
             flops_useful=enc_u + tail_u, flops_padded=enc_p + tail_p)
+        if self.tracer:
+            for (sid, idx), ts in arrived.items():
+                self.tracer.span("queue.wait", "queue", ts, t0,
+                                 track=f"session:{sid}", sid=sid,
+                                 index=idx)
+            self.tracer.span("flush", "flush", t0, t1, track="engine",
+                             flush_id=flush_id, n_events=len(arrived),
+                             n_encoder_calls=n_enc, n_tail_calls=n_tail)
+        self.metrics.inc("engine.flushes")
+        self.metrics.inc("engine.flush_events", len(arrived))
+        self.metrics.observe("flush.wall_s", t1 - t0)
+        for lat in latencies.values():
+            self.metrics.observe("serve.latency_s", lat)
         self._pending.clear()
         self.flushes.append(report)
         if self.max_history is not None:
@@ -1000,6 +1118,9 @@ class EMSServeEngine:
                 st.t_final_prediction = pred.t_emit
         if st.t_first_prediction is None:
             st.t_first_prediction = pred.t_emit
+            if not self.tiered and st.t_first_submit is not None:
+                self.metrics.observe("serve.ttfp_s",
+                                     pred.t_emit - st.t_first_submit)
 
     # ---------------------------------------------------------- eviction
 
@@ -1017,7 +1138,10 @@ class EMSServeEngine:
                 for k in [k for k in versions if k[0] in dropped]:
                     del versions[k]
         del self.sessions[sid]
-        self.evicted_count += 1
+        self.metrics.inc("engine.evicted_sessions")
+        if self.tracer:
+            self.tracer.instant("evict", "session", track="engine",
+                                sid=sid, keys=keys)
 
     def evict_sessions(self, now: Optional[float] = None) -> int:
         """Cross-incident eviction sweep; returns how many sessions
@@ -1103,6 +1227,11 @@ class EMSServeEngine:
         f.crash_at = t
         period = self.monitors[tier].period
         f.detect_at = (math.floor(t / period) + 1) * period
+        if self.tracer:
+            self.tracer.instant("crash.inject", "fault", t,
+                                track=f"host:{tier}", tier=tier,
+                                detect_at=f.detect_at,
+                                rejoin_at=rejoin_at)
         if rejoin_at is not None:
             self.schedule_rejoin(rejoin_at, tier)
 
@@ -1146,6 +1275,13 @@ class EMSServeEngine:
     def _mark_dead(self, tier: str):
         self._faults[tier].dead = True
         self._replica_versions[tier].clear()   # that replica is gone
+        self.metrics.inc("fault.crashes_detected")
+        if self.tracer:
+            f = self._faults[tier]
+            self.tracer.instant(
+                "crash.detect", "fault",
+                f.detect_at if f.detect_at is not None else self.tracer.now(),
+                track=f"host:{tier}", tier=tier, crash_at=f.crash_at)
 
     def _rejoin(self, tier: str, t: float):
         """A restarted tier comes back: fresh fault state, fresh busy
@@ -1165,7 +1301,11 @@ class EMSServeEngine:
                 versions[(key, m)] = e.version
         if warm_b:
             self.fabric.channel(self.local_name, tier).send(warm_b, t)
-        self.rejoin_count += 1
+        self.metrics.inc("placement.rejoins")
+        if self.tracer:
+            self.tracer.instant("rejoin", "fault", t,
+                                track=f"host:{tier}", tier=tier,
+                                warm_bytes=warm_b)
 
     def _usable_remotes(self, now: float) -> List[str]:
         """Remote tiers a decision made at ``now`` may target, applying
@@ -1256,14 +1396,21 @@ class EMSServeEngine:
         fresh = (next(iter(feats.values()), None) if self.share_encoders
                  else feats.get(model_name))
         out = {}
+        consumed = {}
         for mm in sm.modalities():
             if mm == m and fresh is not None:
                 out[mm] = fresh
+                # the fresh feature carries this very step; its commit
+                # lands before the fuse is recorded
+                consumed[mm] = [st.step, st.input_step.get(mm, st.step)]
                 continue
             e = self.cache.get(key, mm, input_step=st.input_step.get(mm))
             if e is None:
                 return None
             out[mm] = e.feature
+            consumed[mm] = [e.step, st.input_step.get(mm, e.step)]
+        if self.tracer:
+            self._last_consumed = consumed
         return out
 
     def _touch_consumed(self, st: SessionView, model_name: str):
@@ -1290,6 +1437,17 @@ class EMSServeEngine:
         if st.t_first_arrival is None:
             st.t_first_arrival = t_a
         now = max(t_a, st.ready_at)
+        sess = f"session:{sid}"
+        if self.tracer:
+            self.tracer.set_time(now)
+            self.tracer.instant("arrival", "arrival", t_a, track=sess,
+                                sid=sid, index=event.index,
+                                modality=event.modality, step=st.step)
+            if now > t_a:
+                # per-session in-order processing: this arrival waits
+                # for the previous record's emit
+                self.tracer.span("queue.wait", "queue", t_a, now,
+                                 track=sess, sid=sid, index=event.index)
         model_name = select_model(self.models, st.inputs)
         payload_b = self._payload_bytes(event.modality, st.inputs[event.modality])
         avail = self._usable_remotes(now)
@@ -1297,6 +1455,11 @@ class EMSServeEngine:
         dec = self.policy.decide(f"enc:{event.modality}", payload_b, now,
                                  queues=queues, available=avail,
                                  lateness_s=max(0.0, now - t_a))
+        if self.tracer:
+            self.tracer.instant("decide", "placement", now, track=sess,
+                                sid=sid, submodule=f"enc:{event.modality}",
+                                tier=dec.tier, speculate=dec.speculate,
+                                best_remote=dec.best_remote)
 
         partial = None
         if dec.speculate and dec.best_remote is not None:
@@ -1330,11 +1493,33 @@ class EMSServeEngine:
             del st.records[:-self.max_history]
             del self.records[:-self.max_history]
         self._total_latency += rec.latency_s
+        self.metrics.observe("serve.latency_s", rec.latency_s)
+        if self.tracer:
+            self.tracer.span(
+                f"{rec.modality}#{rec.index}", "lifecycle",
+                rec.t_arrival, rec.t_emit, track=sess, sid=sid,
+                index=rec.index, modality=rec.modality,
+                enc_tier=rec.enc_tier, tail_tier=rec.tail_tier,
+                kind=rec.kind, fallback=rec.fallback,
+                speculative=rec.speculative, detect_s=rec.detect_s)
         if rec.outputs is not None:
             if st.t_first_emit is None:
                 st.t_first_emit = rec.t_emit
+                if st.t_first_arrival is not None:
+                    self.metrics.observe("serve.ttfp_s",
+                                         rec.t_emit - st.t_first_arrival)
             if rec.kind == "final" and st.t_final_emit is None:
                 st.t_final_emit = rec.t_emit
+            if self.tracer:
+                key = self._cache_key(sid, rec.model)
+                self.tracer.instant(
+                    "fuse", "fusion", rec.t_emit, track=sess, sid=sid,
+                    key=key, model=rec.model, step=st.step,
+                    consumed=self._last_consumed)
+                self.tracer.instant(
+                    "emit", "predict", rec.t_emit, track=sess, sid=sid,
+                    key=key, model=rec.model, step=st.step, kind=rec.kind,
+                    modalities=sorted(self.models[rec.model].modalities()))
             if self.stream_policy is not None:
                 self._record_prediction(st, Prediction(
                     sid=st.sid, step=st.step, model=rec.model,
@@ -1367,12 +1552,31 @@ class EMSServeEngine:
         if feats is None:
             return None
         outputs = sm.tail(self.params[name], feats)
-        _start, done = self.glass.occupy(self.glass.time("tail"), now)
+        _start, done = self.glass.occupy(self.glass.time("tail"), now,
+                                         label="tail@glass:provisional")
         pred = Prediction(sid=st.sid, step=st.step, model=name,
                           modalities=tuple(sm.modalities()), kind="partial",
                           outputs=outputs, flush_id=-1, t_emit=done)
         self._record_prediction(st, pred)
+        if self.tracer:
+            key = self._cache_key(st.sid, name)
+            sess = f"session:{st.sid}"
+            consumed = {mm: [self.cache.peek(key, mm).step,
+                             st.input_step.get(mm, 0)]
+                        for mm in sm.modalities()}
+            self.tracer.instant("fuse", "fusion", done, track=sess,
+                                sid=st.sid, key=key, model=name,
+                                step=st.step, consumed=consumed,
+                                provisional=True)
+            self.tracer.instant("emit", "predict", done, track=sess,
+                                sid=st.sid, key=key, model=name,
+                                step=st.step, kind="partial",
+                                modalities=sorted(sm.modalities()),
+                                provisional=True)
         if st.t_first_emit is None or done < st.t_first_emit:
+            if st.t_first_emit is None and st.t_first_arrival is not None:
+                self.metrics.observe("serve.ttfp_s",
+                                     done - st.t_first_arrival)
             st.t_first_emit = done
         return pred
 
@@ -1437,7 +1641,12 @@ class EMSServeEngine:
                     queues=self._queues(t_detect), available=survivors)
                 B = dec2.best_remote
                 if B is not None:
-                    self.redispatch_count += 1
+                    self.metrics.inc("placement.redispatches")
+                    if self.tracer:
+                        self.tracer.instant(
+                            "redispatch", "fault", t_detect,
+                            track=f"session:{st.sid}", sid=st.sid,
+                            from_tier=tier, to_tier=B)
                     return self._remote_event(
                         st, event, model_name, payload_b, t_detect, dec2,
                         B, feats=feats, outputs=outputs, fallback=True,
@@ -1500,7 +1709,12 @@ class EMSServeEngine:
 
         # tie -> local: offloading must strictly win (the legacy rule)
         glass_wins = crashed or g_done <= r_emit
-        self.spec_count += 1
+        self.metrics.inc("speculation.races")
+        if self.tracer:
+            self.tracer.instant("race.start", "speculation", now,
+                                track=f"session:{st.sid}", sid=st.sid,
+                                remote=A, glass_done=g_done,
+                                remote_emit=r_emit, crashed=crashed)
         stamp_fresh_remote = False
 
         if glass_wins:
@@ -1528,9 +1742,9 @@ class EMSServeEngine:
             winner, t_start, t_emit = local, g_start, g_done
             uplink_s = downlink_s = 0.0
             compute_s, loser_emit = g_dur, r_emit
-            self.on_glass_count += 1
+            self.metrics.inc("placement.on_glass")
             if crashed:
-                self.spec_crash_saves += 1
+                self.metrics.inc("speculation.crash_saves")
         else:
             _rs, rd = host.occupy(r_dur, up.t_deliver)
             down = down_ch.send(down_b, rd)
@@ -1544,19 +1758,24 @@ class EMSServeEngine:
             uplink_s = up.t_deliver - up.t_send
             downlink_s = down.t_deliver - rd
             compute_s, loser_emit = r_dur, g_done
-            self.offloaded_count += 1
+            self.metrics.inc("placement.offloaded")
 
+        if self.tracer:
+            self.tracer.instant("race.win", "speculation", t_emit,
+                                track=f"session:{st.sid}", sid=st.sid,
+                                winner=winner, loser_emit=loser_emit,
+                                crashed=crashed)
         # ---- commit ONCE, for the winner only
         self._commit_features(st, m, feats, tier=winner)
         if outputs is not None:
             self._touch_consumed(st, model_name)
-            self.tail_counts[winner] += 1
+            self.metrics.inc(f"placement.tail.{winner}")
         if stamp_fresh_remote:
             # the loser computed (or received) the same fresh feature;
             # its replica holds the committed version
             self._stamp_fresh(A, st, m)
-        self.place_counts[winner] += 1
-        self.spec_wins[winner] += 1
+        self.metrics.inc(f"placement.enc.{winner}")
+        self.metrics.inc(f"speculation.wins.{winner}")
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
             tier=winner, kind=self._kind(model_name),
@@ -1589,12 +1808,12 @@ class EMSServeEngine:
         if outputs is not None:
             dur += self.glass.time("tail")
         start, done = self.glass.occupy(dur, now)
-        self.on_glass_count += 1
-        self.place_counts[local] += 1
+        self.metrics.inc("placement.on_glass")
+        self.metrics.inc(f"placement.enc.{local}")
         if outputs is not None:
-            self.tail_counts[local] += 1
+            self.metrics.inc(f"placement.tail.{local}")
         if fallback:
-            self.fallback_count += 1
+            self.metrics.inc("placement.fallbacks")
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
             tier=local, kind=self._kind(model_name),
@@ -1659,12 +1878,12 @@ class EMSServeEngine:
         for k, version in synced:
             versions[k] = version
         self._stamp_fresh(A, st, m)
-        self.offloaded_count += 1
-        self.place_counts[A] += 1
+        self.metrics.inc("placement.offloaded")
+        self.metrics.inc(f"placement.enc.{A}")
         if outputs is not None:
-            self.tail_counts[A] += 1
+            self.metrics.inc(f"placement.tail.{A}")
         if fallback:
-            self.fallback_count += 1
+            self.metrics.inc("placement.fallbacks")
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
             tier=A, kind=self._kind(model_name),
@@ -1776,10 +1995,10 @@ class EMSServeEngine:
                 _s2, done = self.glass.occupy(self.glass.time("tail"),
                                               t_detect)
                 self._touch_consumed(st, model_name)
-                self.on_glass_count += 1
-                self.fallback_count += 1
-                self.place_counts[local] += 1
-                self.tail_counts[local] += 1
+                self.metrics.inc("placement.on_glass")
+                self.metrics.inc("placement.fallbacks")
+                self.metrics.inc(f"placement.enc.{local}")
+                self.metrics.inc(f"placement.tail.{local}")
                 return TieredRecord(
                     sid=st.sid, index=event.index, modality=m,
                     model=model_name, tier=local,
@@ -1798,9 +2017,9 @@ class EMSServeEngine:
             for k, version in synced:
                 versions[k] = version
             self._stamp_fresh(T, st, m)
-            self.on_glass_count += 1
-            self.place_counts[local] += 1
-            self.tail_counts[T] += 1
+            self.metrics.inc("placement.on_glass")
+            self.metrics.inc(f"placement.enc.{local}")
+            self.metrics.inc(f"placement.tail.{T}")
             return TieredRecord(
                 sid=st.sid, index=event.index, modality=m,
                 model=model_name, tier=local, kind=self._kind(model_name),
@@ -1830,9 +2049,9 @@ class EMSServeEngine:
             _s2, done = self.glass.occupy(self.glass.time("tail"),
                                           down.t_deliver)
             self._touch_consumed(st, model_name)
-            self.offloaded_count += 1
-            self.place_counts[A] += 1
-            self.tail_counts[local] += 1
+            self.metrics.inc("placement.offloaded")
+            self.metrics.inc(f"placement.enc.{A}")
+            self.metrics.inc(f"placement.tail.{local}")
             return TieredRecord(
                 sid=st.sid, index=event.index, modality=m,
                 model=model_name, tier=A, kind=self._kind(model_name),
@@ -1875,9 +2094,9 @@ class EMSServeEngine:
             versions[k] = version
         self._stamp_fresh(A, st, m)
         self._stamp_fresh(B, st, m)
-        self.offloaded_count += 1
-        self.place_counts[A] += 1
-        self.tail_counts[B] += 1
+        self.metrics.inc("placement.offloaded")
+        self.metrics.inc(f"placement.enc.{A}")
+        self.metrics.inc(f"placement.tail.{B}")
         return TieredRecord(
             sid=st.sid, index=event.index, modality=m, model=model_name,
             tier=A, kind=self._kind(model_name),
@@ -2168,6 +2387,7 @@ def parse_spec(spec, **overrides) -> EngineSpec:
 
 def build_engine(models: Dict[str, SplitModel], params: Dict[str, dict],
                  spec, *, time_fn: Callable[[], float] = time.perf_counter,
+                 tracer: Optional[Tracer] = None,
                  **overrides) -> EMSServeEngine:
     """THE factory: assemble an :class:`EMSServeEngine` from a spec.
 
@@ -2175,9 +2395,11 @@ def build_engine(models: Dict[str, SplitModel], params: Dict[str, dict],
     fast path; ``"stream"`` the progressive-prediction runtime;
     ``"stream+tiered"`` streams partials on-glass while the edge
     computes finals. See :func:`parse_spec` for the spec grammar and
-    override routing."""
+    override routing. ``tracer`` (a :class:`repro.obs.Tracer`) turns on
+    full-lifecycle span tracing; it defaults to the no-op."""
     es = parse_spec(spec, **overrides)
     return EMSServeEngine(models, params, batch=es.batch, stream=es.stream,
                           placement=es.placement,
                           share_encoders=es.share_encoders,
-                          max_history=es.max_history, time_fn=time_fn)
+                          max_history=es.max_history, time_fn=time_fn,
+                          tracer=tracer)

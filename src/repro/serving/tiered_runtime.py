@@ -76,7 +76,8 @@ class TieredEMSServe(EMSServeEngine):
                  speculation=None, redispatch: bool = False,
                  share_encoders: bool = False,
                  bucketer: Optional[Bucketer] = None,
-                 max_history: Optional[int] = 256):
+                 max_history: Optional[int] = 256,
+                 tracer=None):
         super().__init__(
             models, params,
             batch=BatchPolicy(bucketer=bucketer),   # None: unbucketed, as ever
@@ -90,4 +91,4 @@ class TieredEMSServe(EMSServeEngine):
                 tail_placement=tail_placement, speculation=speculation,
                 redispatch=redispatch),
             share_encoders=share_encoders,
-            max_history=max_history)
+            max_history=max_history, tracer=tracer)

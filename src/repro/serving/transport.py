@@ -43,6 +43,7 @@ from repro.core.offload import BandwidthTrace
 # THE byte-sizing rule lives in core (the benchmarks report with it);
 # re-exported here because it is also the transport's charging rule.
 from repro.core.splitter import payload_nbytes  # noqa: F401
+from repro.obs import Metrics, Tracer
 
 
 @dataclass
@@ -70,12 +71,11 @@ class TransportChannel:
     latency_s: float = 0.005            # per-message propagation latency
     overhead_bytes: int = 64            # framing / header per message
     name: str = "link"
-    # ---- lifetime accounting
-    bytes_sent: int = 0
-    msgs_sent: int = 0
-    busy_s: float = 0.0                 # total serialization seconds
-    cancelled_msgs: int = 0
-    cancelled_bytes: int = 0
+    # lifetime byte/message accounting lives on the (possibly shared)
+    # metrics registry under "transport.<name>.*"; the historical
+    # attributes survive as read-through properties below
+    metrics: Optional[Metrics] = None
+    tracer: Optional[Tracer] = None
     _last_deliver: float = field(default=0.0, repr=False)
     deliveries: List[Delivery] = field(default_factory=list, repr=False)
     max_history: Optional[int] = 256
@@ -85,6 +85,37 @@ class TransportChannel:
                                 repr=False)
     _flights: Dict[int, Delivery] = field(default_factory=dict,
                                           repr=False)
+
+    def __post_init__(self):
+        if self.metrics is None:
+            self.metrics = Metrics()
+        if self.tracer is None:
+            self.tracer = Tracer.disabled
+
+    # ---- legacy counter attributes (read-through to the registry)
+    def _key(self, leaf: str) -> str:
+        return f"transport.{self.name}.{leaf}"
+
+    @property
+    def bytes_sent(self) -> int:
+        return int(self.metrics.get(self._key("bytes")))
+
+    @property
+    def msgs_sent(self) -> int:
+        return int(self.metrics.get(self._key("msgs")))
+
+    @property
+    def busy_s(self) -> float:
+        """Total serialization seconds."""
+        return float(self.metrics.get(self._key("busy_s")))
+
+    @property
+    def cancelled_msgs(self) -> int:
+        return int(self.metrics.get(self._key("cancelled_msgs")))
+
+    @property
+    def cancelled_bytes(self) -> int:
+        return int(self.metrics.get(self._key("cancelled_bytes")))
 
     def eta(self, nbytes: int, t: float) -> float:
         """Delivery time a ``send(nbytes, t)`` WOULD produce, without
@@ -110,9 +141,15 @@ class TransportChannel:
                      transfer_s=transfer, queued_s=queued,
                      flight=next(self.fids))
         self._last_deliver = d.t_deliver
-        self.bytes_sent += nbytes
-        self.msgs_sent += 1
-        self.busy_s += transfer
+        self.metrics.inc(self._key("bytes"), nbytes)
+        self.metrics.inc(self._key("msgs"))
+        self.metrics.inc(self._key("busy_s"), transfer)
+        if self.tracer:
+            self.tracer.span(
+                "transport.flight", "transport", d.t_send, d.t_deliver,
+                track=f"link:{self.name}", flight=d.flight,
+                channel=self.name, nbytes=d.nbytes, t_send=d.t_send,
+                t_deliver=d.t_deliver, queued_s=d.queued_s)
         self.deliveries.append(d)
         self._flights[d.flight] = d
         if self.max_history is not None:
@@ -136,8 +173,15 @@ class TransportChannel:
         if t is not None and t >= d.t_deliver:
             return False                # already delivered — too late
         d.cancelled = True
-        self.cancelled_msgs += 1
-        self.cancelled_bytes += d.nbytes
+        self.metrics.inc(self._key("cancelled_msgs"))
+        self.metrics.inc(self._key("cancelled_bytes"), d.nbytes)
+        if self.tracer:
+            self.tracer.instant(
+                "transport.cancel", "transport",
+                t if t is not None else d.t_send,
+                track=f"link:{self.name}", flight=d.flight,
+                channel=self.name, nbytes=d.nbytes,
+                t=t if t is not None else d.t_send)
         if self._last_deliver == d.t_deliver:
             prev = max((x.t_deliver for x in self.deliveries
                         if not x.cancelled), default=0.0)
@@ -187,11 +231,15 @@ class TierFabric:
     """
 
     def __init__(self, local: str, traces: dict, *,
-                 latency_s: float = 0.005, overhead_bytes: int = 64):
+                 latency_s: float = 0.005, overhead_bytes: int = 64,
+                 metrics: Optional[Metrics] = None,
+                 tracer: Optional[Tracer] = None):
         self.local = local
         self.traces = dict(traces)
         self.latency_s = latency_s
         self.overhead_bytes = overhead_bytes
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.tracer = tracer if tracer is not None else Tracer.disabled
         self._channels = {}
         # ONE flight-id space across every channel: a flight id names
         # its transfer unambiguously fabric-wide (cancel-on-commit
@@ -213,7 +261,8 @@ class TierFabric:
             ch = self._channels[key] = TransportChannel(
                 self.trace(src, dst), latency_s=self.latency_s,
                 overhead_bytes=self.overhead_bytes, name=f"{src}->{dst}",
-                fids=self._fids)
+                fids=self._fids, metrics=self.metrics,
+                tracer=self.tracer)
         return ch
 
     def cancel(self, flight: int, t: Optional[float] = None) -> bool:

@@ -1,0 +1,412 @@
+"""Unified serving observability: tracer, metrics registry, auditor.
+
+Three claims under test:
+
+  * **defaults off** — ``Tracer.disabled`` is a falsy no-op and every
+    engine wires it by default, so an untraced run records nothing and
+    the legacy counter attributes still read correctly through the
+    metrics registry;
+  * **deterministic traces** — events carry a monotone per-tracer seq,
+    export stable-sorts at equal timestamps and serializes canonically,
+    so two identical simulated-clock runs produce byte-identical files
+    that validate as Chrome trace-event JSON;
+  * **the auditor proves the invariants from the trace alone** — zero
+    violations across every scenario family the repo serves (all
+    LAG_SCENARIOS stream orderings, the 3^4 forced-placement sweep,
+    speculation races incl. cancelled flights, seeded chaos schedules),
+    and tampering with a trace (version skip, unstamped fuse input,
+    cancel-after-deliver, emit without fuse) is caught.
+"""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthTrace, LAG_SCENARIOS, ProfileTable,
+                        async_episode, emsnet_zoo, horizon,
+                        nlos_bandwidth, split)
+from repro.core.episodes import Event
+from repro.core.offload import SpeculationPolicy
+from repro.obs import (Metrics, QuantileSketch, Tracer, audit_doc,
+                       audit_tracer, validate_chrome)
+from repro.obs.audit import main as audit_main
+from repro.serving.api import build_engine
+from repro.serving.transport import TransportChannel
+
+ALL = ("text", "vitals", "scene")
+TIERS = ("glass", "ph1", "edge64x")
+BASE = {"enc:text": 0.08, "enc:vitals": 0.01, "enc:scene": 0.05,
+        "tail": 0.005, "full": 0.15}
+RACE_ALWAYS = SpeculationPolicy(deadline_s=0.0, margin_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def zoo_models(tiny_emsnet_cfg):
+    cfg = tiny_emsnet_cfg
+    zoo = emsnet_zoo(cfg)
+    splits = {k: split(m) for k, m in zoo.items()}
+    shared = zoo["text+vitals+scene"].init_fn(jax.random.PRNGKey(0))
+    params = {k: shared for k in zoo}
+    rng = np.random.default_rng(0)
+    payloads = {
+        "text": jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 11)),
+                            jnp.int32),
+        "vitals": jnp.asarray(rng.normal(size=(1, 5, cfg.n_vitals)),
+                              jnp.float32),
+        "scene": jnp.asarray(rng.integers(0, 2, (1, cfg.scene_dim)),
+                             jnp.float32),
+    }
+    return cfg, splits, shared, params, payloads
+
+
+def _tiered(splits, params, *, bandwidth=5.0, **kw):
+    kw.setdefault("max_history", None)
+    kw.setdefault("tier_traces",
+                  {"ph1": BandwidthTrace.static(nlos_bandwidth(0.0))})
+    kw.setdefault("trace", BandwidthTrace.static(nlos_bandwidth(bandwidth)))
+    kw.setdefault("tiers", TIERS)
+    return build_engine(
+        splits, params, "tiered", share_encoders=True,
+        profile=ProfileTable(base=dict(BASE)), **kw)
+
+
+def _episode():
+    return [Event(i, m, float(i)) for i, m in enumerate(ALL)]
+
+
+def _audit_ok(eng):
+    rep = audit_tracer(eng.tracer,
+                       other_data={"transport": eng.fabric.stats()})
+    assert rep.ok, rep.violations
+    return rep
+
+
+# ====================================================== defaults off
+
+def test_disabled_tracer_is_falsy_noop_default(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    assert not Tracer.disabled and bool(Tracer())
+    Tracer.disabled.span("x", "c", 0.0, 1.0)
+    Tracer.disabled.instant("y", "c", 0.0)
+    assert Tracer.disabled.events == []
+    eng = _tiered(splits, params)
+    eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert eng.tracer is Tracer.disabled and eng.tracer.events == []
+
+
+def test_legacy_counters_read_through_registry(zoo_models):
+    """The historical attributes and the registry are the same number:
+    migrating the counters changed their storage, not their meaning."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _tiered(splits, params)
+    for ev in _episode():
+        eng.submit("s0", ev, payloads[ev.modality])
+    m = eng.metrics
+    assert eng.cache.hits == int(m.get("cache.hits")) > 0
+    assert eng.cache.duplicate_commits == int(m.get("cache.duplicate_commits"))
+    assert eng.fallback_count == int(m.get("placement.fallbacks"))
+    assert eng.evicted_count == int(m.get("engine.evicted_sessions"))
+    for name, ch in eng.fabric.stats().items():
+        assert ch["bytes"] == int(m.get(f"transport.{name}.bytes"))
+        assert ch["cancelled_msgs"] == int(
+            m.get(f"transport.{name}.cancelled_msgs"))
+    snap = eng.metrics_snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    assert snap["histograms"]["serve.latency_s"]["count"] == 3
+    assert snap["gauges"]["engine.sessions_live"] == 1
+
+
+# ============================================== deterministic export
+
+def test_trace_export_is_byte_reproducible(zoo_models, tmp_path):
+    cfg, splits, shared, params, payloads = zoo_models
+    paths = []
+    for n in (1, 2):
+        eng = _tiered(splits, params, tracer=Tracer(),
+                      speculation=RACE_ALWAYS)
+        for ev in _episode():
+            eng.submit("s0", ev, payloads[ev.modality])
+        p = tmp_path / f"t{n}.json"
+        eng.tracer.export(p, other_data={"transport": eng.fabric.stats()})
+        paths.append(p)
+    b1, b2 = paths[0].read_bytes(), paths[1].read_bytes()
+    assert b1 == b2 and len(b1) > 0
+
+
+def test_seq_is_monotone_and_ties_sort_stably():
+    tr = Tracer()
+    for i in range(5):
+        tr.instant("tie", "t", 1.0, track="a", i=i)   # all at the same ts
+    tr.span("before", "t", 0.0, 1.0, track="b")
+    doc = tr.to_chrome()
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    seqs = [e["args"]["seq"] for e in evs]
+    assert evs[0]["name"] == "before"                  # ts order first
+    assert [e["args"]["i"] for e in evs[1:]] == list(range(5))
+    assert sorted(set(seqs)) == sorted(seqs)           # unique, monotone
+
+
+def test_chrome_schema_tracks_and_units(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _tiered(splits, params, tracer=Tracer())
+    for ev in _episode():
+        eng.submit("s0", ev, payloads[ev.modality])
+    doc = eng.tracer.to_chrome()
+    assert validate_chrome(doc) == []
+    assert doc["displayTimeUnit"] == "ms"
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"cache", "session:s0"} <= names
+    assert any(n.startswith("host:") for n in names)
+    assert any(n.startswith("link:") for n in names)
+    # lifecycle span for each arrival, in microseconds on the session tid
+    spans = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] == "text#0"]
+    assert len(spans) == 1 and spans[0]["dur"] > 0
+
+
+# ==================================================== metrics registry
+
+def test_metrics_registry_basics():
+    m = Metrics()
+    m.inc("a")
+    m.inc("a", 2.5)
+    assert m.get("a") == 3.5 and m.get("absent") == 0
+    m.set_gauge("g", 7)
+    m.gauge_fn("live", lambda: 42)
+    for v in (1.0, 2.0, 3.0):
+        m.observe("h", v)
+    snap = m.snapshot()
+    assert snap["counters"] == {"a": 3.5}
+    assert snap["gauges"] == {"g": 7, "live": 42}
+    assert snap["histograms"]["h"]["count"] == 3
+    assert snap["histograms"]["h"]["mean"] == pytest.approx(2.0)
+    json.dumps(snap)                       # JSON-serializable end to end
+    m.reset()
+    snap = m.snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+    assert snap["gauges"] == {"live": 42}  # callable gauges survive reset
+
+
+def test_sketch_rank_error_bound_seeded():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(mean=2.0, sigma=1.5, size=4000)
+    sk = QuantileSketch(rel_err=0.01)
+    for x in xs:
+        sk.add(float(x))
+    srt = np.sort(xs)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        true = float(srt[int(np.floor(q * (len(xs) - 1)))])
+        got = sk.quantile(q)
+        assert abs(got - true) <= 1.01 * sk.rel_err * true, q
+
+
+def test_sketch_merge_is_associative_on_state():
+    rng = np.random.default_rng(4)
+    sks = []
+    for _ in range(3):
+        sk = QuantileSketch(rel_err=0.02)
+        for x in rng.uniform(0.0, 50.0, size=200):
+            sk.add(float(x))
+        sks.append(sk)
+    a, b, c = sks
+    left, right = a.merge(b).merge(c), a.merge(b.merge(c))
+    assert left.state() == right.state()
+    for q in (0.1, 0.5, 0.99):
+        assert left.quantile(q) == right.quantile(q)
+
+
+# ============================================ auditor: scenario families
+
+def test_audit_all_lag_scenarios_stream(zoo_models):
+    """One streaming run holding every LAG_SCENARIOS arrival ordering at
+    once replays through the auditor with zero violations."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = build_engine(splits, params, "stream", share_encoders=True,
+                       max_history=None, tracer=Tracer())
+    eps = {name: async_episode(name, seed=i)
+           for i, name in enumerate(sorted(LAG_SCENARIOS))}
+    eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                     sim_window=0.0)
+    rep = audit_tracer(eng.tracer)
+    assert rep.ok, rep.violations
+    assert rep.checks["fuses"] > 0 and rep.checks["emits"] > 0
+
+
+def test_audit_placement_sweep_81(zoo_models):
+    """Every 3^4 forced per-submodule tier assignment produces a trace
+    the auditor accepts, with the transport cross-checked against the
+    live fabric stats."""
+    cfg, splits, shared, params, payloads = zoo_models
+    submods = ("enc:text", "enc:vitals", "enc:scene", "tail")
+    total = dict.fromkeys(("commits", "fuses", "flights"), 0)
+    for combo in itertools.product(TIERS, repeat=len(submods)):
+        eng = _tiered(splits, params, tracer=Tracer(),
+                      force=dict(zip(submods, combo)))
+        for ev in _episode():
+            eng.submit("s0", ev, payloads[ev.modality])
+        rep = _audit_ok(eng)
+        for k in total:
+            total[k] += rep.checks[k]
+    assert total["commits"] >= 81 * 3 and total["fuses"] >= 81 * 3
+    assert total["flights"] > 0
+
+
+def test_audit_speculation_remote_wins(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _tiered(splits, params, tracer=Tracer(), speculation=RACE_ALWAYS)
+    for ev in _episode():
+        eng.submit("s0", ev, payloads[ev.modality])
+    assert eng.spec_count == 3
+    rep = _audit_ok(eng)
+    assert rep.checks["flights"] > 0
+    races = [e for e in eng.tracer.events if e.name == "race.start"]
+    wins = [e for e in eng.tracer.events if e.name == "race.win"]
+    assert len(races) == 3 and len(wins) == 3
+
+
+def test_audit_speculation_glass_wins_cancelled_flight(zoo_models):
+    """The cancel-on-commit path: the starved uplink flight is
+    cancelled, and the auditor both accepts the trace AND accounts the
+    cancelled bytes in its conservation check."""
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _tiered(splits, params, trace=BandwidthTrace.static(200.0),
+                  tier_traces={}, speculation=RACE_ALWAYS, tracer=Tracer())
+    rec = eng.submit("s0", Event(0, "text", 0.0), payloads["text"])
+    assert rec.race_winner == "glass"
+    rep = _audit_ok(eng)
+    assert rep.checks["cancels"] == 1
+
+
+def test_audit_seeded_chaos_schedule(zoo_models):
+    cfg, splits, shared, params, payloads = zoo_models
+    from repro.serving.chaos import chaos_schedule
+    eps = {f"s{i}": async_episode("text_first", seed=i) for i in range(2)}
+    sched = chaos_schedule(5, horizon=horizon(eps),
+                           tiers=("ph1", "edge64x"),
+                           mean_up_s=1.5, mean_down_s=0.6,
+                           min_up_s=0.4, min_down_s=0.3)
+    eng = _tiered(splits, params, tracer=Tracer(), redispatch=True,
+                  speculation=RACE_ALWAYS)
+    eng.run_arrivals(eps, lambda sid, ev: payloads[ev.modality],
+                     schedule=sched)
+    assert eng.rejoin_count >= 1
+    rep = _audit_ok(eng)
+    names = {e.name for e in eng.tracer.events}
+    assert {"crash.inject", "rejoin"} <= names
+    assert rep.checks["commits"] > 0 and rep.checks["flights"] > 0
+
+
+# ================================================= auditor: tampering
+
+def _minimal_doc():
+    """Hand-built clean trace: commit -> fuse -> emit, one flight +
+    cancel, all in program order."""
+    tr = Tracer()
+    tr.instant("cache.commit", "cache", 0.0, track="cache", key="s0",
+               modality="text", step=0, tier="glass", accepted=True,
+               version=0)
+    tr.span("transport.flight", "transport", 0.0, 1.0, track="link:u",
+            flight=0, channel="u", nbytes=100, t_send=0.0, t_deliver=1.0,
+            queued_s=0.0)
+    tr.instant("transport.cancel", "transport", 0.5, track="link:u",
+               flight=0, channel="u", nbytes=100, t=0.5)
+    tr.instant("fuse", "serve", 1.0, track="session:s0", key="s0",
+               model="text", step=0, consumed={"text": [0, 0]})
+    tr.instant("emit", "serve", 1.0, track="session:s0", key="s0",
+               model="text", step=0, kind="partial")
+    return tr.to_chrome()
+
+
+def test_audit_accepts_minimal_doc_then_catches_tampering():
+    doc = _minimal_doc()
+    assert audit_doc(doc).ok
+
+    def ev(name):
+        return next(e for e in doc["traceEvents"] if e.get("name") == name)
+
+    # I1: accepted version skips
+    d = json.loads(json.dumps(doc))
+    next(e for e in d["traceEvents"]
+         if e.get("name") == "cache.commit")["args"]["version"] = 3
+    assert any("I1" in v for v in audit_doc(d).violations)
+
+    # I4: fuse consumes a step never stamped
+    d = json.loads(json.dumps(doc))
+    next(e for e in d["traceEvents"]
+         if e.get("name") == "fuse")["args"]["consumed"] = {"text": [5, 5]}
+    assert any("I4" in v for v in audit_doc(d).violations)
+
+    # I2: staleness beyond the bound
+    d = json.loads(json.dumps(doc))
+    next(e for e in d["traceEvents"]
+         if e.get("name") == "fuse")["args"]["consumed"] = {"text": [0, 2]}
+    assert any("I2" in v for v in audit_doc(d).violations)
+
+    # I3: cancel at/after the delivery instant
+    d = json.loads(json.dumps(doc))
+    next(e for e in d["traceEvents"]
+         if e.get("name") == "transport.cancel")["args"]["t"] = 1.0
+    assert any("I3" in v for v in audit_doc(d).violations)
+
+    # I4: emit with no prior fuse
+    d = json.loads(json.dumps(doc))
+    next(e for e in d["traceEvents"]
+         if e.get("name") == "emit")["args"]["key"] = "ghost"
+    assert any("I4" in v for v in audit_doc(d).violations)
+
+    assert ev("emit")["args"]["key"] == "s0"   # originals untouched
+
+
+def test_audit_cli_exit_codes(zoo_models, tmp_path, capsys):
+    cfg, splits, shared, params, payloads = zoo_models
+    eng = _tiered(splits, params, tracer=Tracer())
+    for ev in _episode():
+        eng.submit("s0", ev, payloads[ev.modality])
+    clean = tmp_path / "clean.json"
+    eng.tracer.export(clean, other_data={"transport": eng.fabric.stats()})
+    assert audit_main([str(clean)]) == 0
+    assert "audit OK" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"nope": 1}))
+    assert audit_main([str(bad)]) == 2
+
+    doc = json.loads(clean.read_text())
+    for e in doc["traceEvents"]:
+        if e.get("name") == "emit":
+            e["args"]["key"] = "ghost"
+    tampered = tmp_path / "tampered.json"
+    tampered.write_text(json.dumps(doc))
+    assert audit_main([str(tampered)]) == 1
+
+
+# =============================== byte conservation, random cancels
+
+def test_byte_conservation_under_random_cancel_schedule():
+    """Seeded random send/cancel schedule on a raw channel: the trace
+    replays cleanly against the live stats, and corrupting the stats by
+    one byte is detected."""
+    rng = np.random.default_rng(7)
+    tr = Tracer()
+    ch = TransportChannel(BandwidthTrace.static(1e4), name="g->e",
+                          metrics=Metrics(), tracer=tr, max_history=None)
+    t = 0.0
+    for _ in range(60):
+        t += float(rng.uniform(0.0, 0.05))
+        d = ch.send(int(rng.integers(1, 5000)), t)
+        if rng.random() < 0.4:
+            tc = d.t_send + 0.9 * float(rng.random()) * (d.t_deliver
+                                                         - d.t_send)
+            ch.cancel(d.flight, tc)
+    assert ch.cancelled_msgs > 0
+    stats = {ch.name: ch.stats()}
+    rep = audit_doc(tr.to_chrome({"transport": stats}))
+    assert rep.ok, rep.violations
+    assert rep.checks["flights"] == 60
+    assert rep.checks["cancels"] == ch.cancelled_msgs
+    bad = {ch.name: dict(ch.stats(), bytes=ch.stats()["bytes"] + 1)}
+    assert not audit_doc(tr.to_chrome({"transport": bad})).ok

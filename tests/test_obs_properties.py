@@ -1,0 +1,101 @@
+"""Property tests (hypothesis) for the observability layer.
+
+Three exact claims:
+
+  * **rank-error bound** — for ANY sample multiset and any q, the
+    DDSketch-style ``QuantileSketch`` answer is within ``rel_err``
+    (relative) of the true sample quantile
+    ``sorted(xs)[floor(q*(n-1))]`` (values under the zero-bucket
+    epsilon report exactly 0.0);
+  * **merge associativity** — ``(a+b)+c`` and ``a+(b+c)`` have
+    IDENTICAL bucket state (merging adds integer bucket counts, so it
+    is exact, unlike a float running sum);
+  * **byte conservation** — under ANY random send/cancel schedule on a
+    traced ``TransportChannel``, the trace-replay auditor accepts the
+    trace against the channel's live stats and
+    ``sent == delivered + cancelled`` holds in bytes and messages.
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import Metrics, QuantileSketch, Tracer, audit_doc
+
+SETTINGS = dict(max_examples=60, deadline=None)
+
+values = st.floats(min_value=0.0, max_value=1e9, allow_nan=False,
+                   allow_infinity=False)
+
+
+def _true_quantile(xs, q):
+    return sorted(xs)[int(math.floor(q * (len(xs) - 1)))]
+
+
+@settings(**SETTINGS)
+@given(xs=st.lists(values, min_size=1, max_size=300),
+       q=st.floats(min_value=0.0, max_value=1.0),
+       rel_err=st.sampled_from([0.005, 0.01, 0.05]))
+def test_quantile_rank_error_bound(xs, q, rel_err):
+    sk = QuantileSketch(rel_err=rel_err)
+    for x in xs:
+        sk.add(x)
+    got = sk.quantile(q)
+    true = _true_quantile(xs, q)
+    if true < 1e-12:
+        assert got <= true * (1 + rel_err) + 1e-12
+    else:
+        # 1e-9 absolute slack: float log/pow round-off, not sketch error
+        assert abs(got - true) <= rel_err * true + 1e-9
+
+
+@settings(**SETTINGS)
+@given(parts=st.lists(st.lists(values, max_size=80), min_size=3,
+                      max_size=3))
+def test_merge_is_associative_and_commutative_on_state(parts):
+    sks = []
+    for xs in parts:
+        sk = QuantileSketch(rel_err=0.01)
+        for x in xs:
+            sk.add(x)
+        sks.append(sk)
+    a, b, c = sks
+    assert a.merge(b).merge(c).state() == a.merge(b.merge(c)).state()
+    assert a.merge(b).state() == b.merge(a).state()
+    total = a.merge(b).merge(c)
+    assert total.count == sum(len(p) for p in parts)
+
+
+@settings(**SETTINGS)
+@given(schedule=st.lists(
+    st.tuples(st.integers(min_value=1, max_value=100000),   # nbytes
+              st.floats(min_value=0.001, max_value=0.2),    # inter-send gap
+              st.one_of(st.none(),                          # no cancel ...
+                        st.floats(min_value=0.0, max_value=0.999))),
+    min_size=1, max_size=40))
+def test_byte_conservation_under_random_cancel_schedules(schedule):
+    from repro.core.offload import BandwidthTrace
+    from repro.serving.transport import TransportChannel
+
+    tr = Tracer()
+    ch = TransportChannel(BandwidthTrace.static(5e4), name="g->e",
+                          metrics=Metrics(), tracer=tr, max_history=None)
+    t = 0.0
+    for nbytes, gap, frac in schedule:
+        t += gap
+        d = ch.send(nbytes, t)
+        if frac is not None:
+            # strictly before the delivery instant -> must cancel
+            assert ch.cancel(d.flight,
+                             d.t_send + frac * (d.t_deliver - d.t_send))
+    s = ch.stats()
+    rep = audit_doc(tr.to_chrome({"transport": {ch.name: s}}))
+    assert rep.ok, rep.violations
+    delivered_b = sum(d.nbytes for d in ch.completed())
+    delivered_m = len(ch.completed())
+    assert delivered_b + s["cancelled_bytes"] == s["bytes"]
+    assert delivered_m + s["cancelled_msgs"] == s["msgs"]
+    assert rep.checks["flights"] == len(schedule)
