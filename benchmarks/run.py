@@ -14,7 +14,7 @@ import traceback
 
 SUITES = ("fig8_latency", "fig14_cache_speedup", "fig15_offloading",
           "table3_accuracy", "table4_pmi", "table5_e2e", "serve_throughput",
-          "stream_latency", "tiered_latency", "kernels_bench",
+          "stream_latency", "tiered_latency", "fleet_load", "kernels_bench",
           "roofline_report")
 
 

@@ -38,15 +38,40 @@ def table6(inter_arrival: float = 1.0):
     }
 
 
+def _check_times(ts, *, what="arrival_times") -> List[float]:
+    """Validate an explicit per-event arrival-time sequence: finite,
+    non-negative, non-decreasing. Returns it as a list of floats."""
+    out = [float(t) for t in ts]
+    for i, t in enumerate(out):
+        if not np.isfinite(t) or t < 0.0:
+            raise ValueError(f"{what}[{i}] = {t!r}: need finite t >= 0")
+        if i and t < out[i - 1]:
+            raise ValueError(f"{what} must be non-decreasing: "
+                             f"[{i}] = {t} < [{i - 1}] = {out[i - 1]}")
+    return out
+
+
 def random_episode(n_events: int, seed: int, *, inter_arrival: float = 1.0,
-                   p=(0.05, 0.5, 0.45)) -> List[Event]:
+                   arrival_times=None, p=(0.05, 0.5, 0.45)) -> List[Event]:
     """One speech event (paper: a single symptom description) plus a
-    random mix of vitals/images — NEMSIS records up to 30 vitals/event."""
+    random mix of vitals/images — NEMSIS records up to 30 vitals/event.
+
+    ``arrival_times`` replaces the fixed ``i * inter_arrival`` grid with
+    an explicit per-event arrival-time sequence (length ``n_events``,
+    non-decreasing) — stochastic intra-session lags without a shim.
+    """
     rng = np.random.default_rng(seed)
     kinds = rng.choice(["text", "vitals", "scene"], size=n_events, p=p).tolist()
     if "text" not in kinds:
         kinds[rng.integers(n_events)] = "text"
-    return [Event(i, k, i * inter_arrival) for i, k in enumerate(kinds)]
+    if arrival_times is not None:
+        times = _check_times(arrival_times)
+        if len(times) != n_events:
+            raise ValueError(f"arrival_times has {len(times)} entries "
+                             f"for n_events={n_events}")
+    else:
+        times = [i * inter_arrival for i in range(n_events)]
+    return [Event(i, k, t) for i, (k, t) in enumerate(zip(kinds, times))]
 
 
 def horizon(episodes) -> float:
@@ -94,7 +119,7 @@ LAG_SCENARIOS = {
 def async_episode(scenario: str = "text_first", seed: int = 0, *,
                   n_vitals: int = 6, n_scene: int = 3,
                   vitals_period: float = 1.0, scene_period: float = 2.0,
-                  lags=None) -> List[Event]:
+                  lags=None, times=None) -> List[Event]:
     """Episode with per-modality asynchronous onsets.
 
     Each modality's first arrival is drawn from its lag distribution
@@ -104,22 +129,40 @@ def async_episode(scenario: str = "text_first", seed: int = 0, *,
     ``scene_period`` s after their onsets. Events are returned sorted by
     arrival time and re-indexed — so the *order in which modalities
     appear* varies per seed/scenario, which is exactly the workload the
-    streaming runtime must absorb."""
+    streaming runtime must absorb.
+
+    ``times`` — optional ``{modality: [arrival seconds]}``. A modality
+    listed here uses that explicit per-event sequence verbatim (one
+    event per entry, non-decreasing) instead of the drawn onset + fixed
+    period grid, so callers (e.g. the fleet workload generator) can
+    carry true stochastic intra-session lags without a shim layer.
+    Modalities absent from ``times`` keep the grid behavior, and the
+    rng draw order is unchanged when ``times`` is None."""
     spec = dict(lags if lags is not None else LAG_SCENARIOS[scenario])
+    times = dict(times or {})
     rng = np.random.default_rng(seed)
 
     def onset(m):
         mu, sigma = spec[m]
         return float(max(0.0, rng.normal(mu, sigma)))
 
+    def explicit(m):
+        return [(m, t) for t in _check_times(times[m], what=f"times[{m!r}]")]
+
     events = []
-    if "text" in spec:
+    if "text" in times:
+        events += explicit("text")
+    elif "text" in spec:
         events.append(("text", onset("text")))
-    if "vitals" in spec:
+    if "vitals" in times:
+        events += explicit("vitals")
+    elif "vitals" in spec:
         t0 = onset("vitals")
         events += [("vitals", t0 + i * vitals_period)
                    for i in range(max(1, n_vitals))]
-    if "scene" in spec:
+    if "scene" in times:
+        events += explicit("scene")
+    elif "scene" in spec:
         t0 = onset("scene")
         events += [("scene", t0 + i * scene_period)
                    for i in range(max(1, n_scene))]

@@ -31,6 +31,17 @@ while the edge computes each offloaded refresh. ``--wall-clock`` pumps
 deadline flushes from a monotonic clock
 (``serving.event_loop.WallClockDriver``); ``--speed`` fast-forwards.
 
+``--fleet RATE --replicas N`` runs the region simulator instead
+(``repro.fleet``): N engine replicas from one spec over mesh-placed
+parameters, open-loop Poisson incident arrivals at RATE sessions/s,
+consistent-hash routing, deadline admission control with on-glass
+shedding. ``--metrics-out`` writes Prometheus text; ``--trace x.jsonl``
+streams a bounded-memory audit trace:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python -m repro.launch.serve --fleet 4 \
+      --replicas 2 --sessions 12 --trace fleet.jsonl --metrics-out m.prom
+
 The pre-unification flags ``--batched/--stream/--tiered N`` still work
 as deprecation shims that map onto the equivalent ``--engine`` spec.
 """
@@ -322,6 +333,10 @@ def serve_unified(args):
         print(f"ragged flush: {eng.ragged.n_shapes()} packed shapes, "
               f"mean padded-FLOP fraction "
               f"{float(np.mean(pf)) if pf else 0.0:.3f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(eng.metrics.to_prometheus())
+        print(f"metrics: prometheus text -> {args.metrics_out}")
     if tracer is not None:
         other = {"metrics": eng.metrics_snapshot()}
         if tiered:
@@ -330,6 +345,80 @@ def serve_unified(args):
         print(f"trace: {n_ev} events -> {args.trace} "
               f"(load in Perfetto: ui.perfetto.dev; audit: "
               f"python -m repro.obs.audit {args.trace})")
+
+
+def serve_fleet(args):
+    """``--fleet RATE``: open-loop region simulation — ``--replicas N``
+    engine replicas built from ONE spec over mesh-placed parameters,
+    Poisson session arrivals at RATE sessions/s, consistent-hash +
+    least-loaded routing, deadline admission control, and the on-glass
+    degraded shed path for what the region turns away."""
+    from repro.configs.emsnet import config as emsnet_config
+    from repro.core import ProfileTable, profile
+    from repro.fleet import (AdmissionController, AdmissionPolicy,
+                             RegionSim, fleet_mesh, generate_workload,
+                             place_fleet_params)
+
+    cfg = emsnet_config(text_encoder=args.text_encoder, vocab_size=2048)
+    splits, params = build_zoo(cfg)
+    placed, placement = place_fleet_params(params, fleet_mesh())
+    payloads = sample_payloads(cfg)
+    payload_fn = lambda sid, ev: payloads[ev.modality]  # noqa: E731
+
+    tracer = None
+    if args.trace:
+        from repro.obs import StreamingTracer, Tracer
+        tracer = (StreamingTracer(args.trace, buffer=512)
+                  if args.trace.endswith(".jsonl") else Tracer())
+
+    full = splits["text+vitals+scene"]
+    base = profile(full, placed["text+vitals+scene"], payloads, iters=2)
+    deadline = (args.deadline_ms / 1e3) if args.deadline_ms else 0.5
+    ctrl = AdmissionController(AdmissionPolicy(deadline_s=deadline),
+                              args.replicas)
+    sim = RegionSim(splits, placed, n_replicas=args.replicas,
+                    admission=ctrl, profile=ProfileTable(base=base),
+                    tracer=tracer)
+    axes = "x".join(str(v) for v in placement["axis_sizes"].values())
+    print(f"fleet: {args.replicas} replicas, params on {axes} mesh over "
+          f"{placement['devices']} device(s) "
+          f"({placement['replicated_leaves']} replicated / "
+          f"{placement['sharded_leaves']} sharded leaves, "
+          f"{placement['param_bytes'] / 1e6:.1f} MB), "
+          f"admission deadline {deadline * 1e3:.0f} ms")
+
+    horizon = args.sessions / args.fleet
+    sessions = generate_workload(args.fleet, horizon, seed=0)
+    rep = sim.run(sessions, payload_fn)
+
+    ttfp = sorted(sim.ttfp.values())
+    p = lambda q: ttfp[min(len(ttfp) - 1,  # noqa: E731
+                           int(q * len(ttfp)))] if ttfp else float("nan")
+    print(f"\n{rep['sessions_offered']} sessions offered @ "
+          f"{args.fleet:g}/s: {rep['sessions_admitted']} admitted "
+          f"({rep['sessions_finalized']} finalized), "
+          f"{rep['sessions_shed']} shed to glass "
+          f"({rep['degraded_partials']} degraded partials)")
+    print(f"admitted TTFP p50 {p(0.50) * 1e3:7.1f} ms | "
+          f"p95 {p(0.95) * 1e3:7.1f} ms | "
+          f"makespan {rep['makespan_s']:.2f}s | "
+          f"{rep['sessions_finalized'] / rep['makespan_s']:.2f} "
+          f"finalized sessions/s")
+    for r, pr in enumerate(rep["per_replica"]):
+        print(f"  replica {r}: {pr['sessions']:3d} sessions "
+              f"{pr['flushes']:4d} flushes "
+              f"idle-at {pr['final_clock_s']:.2f}s")
+
+    mx = sim.fleet_metrics()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(mx.to_prometheus())
+        print(f"metrics: prometheus text -> {args.metrics_out}")
+    if tracer is not None:
+        n_ev = tracer.export(args.trace,
+                             other_data={"metrics": mx.snapshot()})
+        print(f"trace: {n_ev} events -> {args.trace} "
+              f"(audit: python -m repro.obs.audit {args.trace})")
 
 
 def parse_spec_tokens(engine_arg: str):
@@ -423,11 +512,29 @@ def main():
                     help="tiered spec with --tiers: seeded random "
                          "crash/rejoin schedule over the remote tiers "
                          "(repeated crash->re-dispatch->rejoin cycles)")
+    ap.add_argument("--fleet", type=float, default=0.0, metavar="RATE",
+                    help="region simulation: offer whole incident "
+                         "sessions at RATE sessions/s (open-loop "
+                         "Poisson) to --replicas engine replicas with "
+                         "admission control; --sessions N is the total "
+                         "offered count")
+    ap.add_argument("--replicas", type=int, default=2, metavar="N",
+                    help="--fleet: engine replicas (params are placed "
+                         "across the jax device mesh; emulate devices "
+                         "with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the run's metrics registry as "
+                         "Prometheus text exposition to PATH (fleet "
+                         "mode: exact fleet-wide merge across replicas)")
     ap.add_argument("--trace", default="", metavar="PATH",
-                    help="--engine specs: record every event's serving "
-                         "lifecycle with repro.obs.Tracer and export a "
-                         "Chrome trace-event JSON (Perfetto-loadable, "
-                         "auditable via python -m repro.obs.audit)")
+                    help="--engine/--fleet: record every event's "
+                         "serving lifecycle with repro.obs.Tracer and "
+                         "export a Chrome trace-event JSON (Perfetto-"
+                         "loadable, auditable via python -m "
+                         "repro.obs.audit); a .jsonl PATH in fleet mode "
+                         "streams through the bounded-memory "
+                         "StreamingTracer instead")
     ap.add_argument("--wall-clock", action="store_true",
                     help="stream/tiered specs: replay arrivals and pump "
                          "deadline flushes from a monotonic clock")
@@ -442,10 +549,23 @@ def main():
                     help="deprecated: --engine tiered --sessions N")
     args = _apply_legacy_shims(ap.parse_args())
 
-    if args.trace and not args.engine:
-        raise SystemExit("--trace requires an --engine spec (the "
+    if args.fleet < 0.0:
+        raise SystemExit("--fleet RATE must be > 0 (sessions/s)")
+    if args.fleet and args.engine:
+        raise SystemExit("--fleet conflicts with --engine: the region "
+                         "simulator builds its own replica engines "
+                         "from one spec")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.trace and not (args.engine or args.fleet):
+        raise SystemExit("--trace requires --engine or --fleet (the "
                          "reference per-event engine predates the "
                          "traced serving stack)")
+    if args.metrics_out and not (args.engine or args.fleet):
+        raise SystemExit("--metrics-out requires --engine or --fleet")
+    if args.fleet:
+        serve_fleet(args)
+        return
     if args.engine:
         serve_unified(args)
         return

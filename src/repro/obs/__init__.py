@@ -8,17 +8,22 @@ numbers regenerate bit-identically:
     chaos annotations; Chrome trace-event (Perfetto-loadable) JSON
     export, byte-reproducible under the deterministic clock.
     ``Tracer.disabled`` is the falsy no-op default.
+    ``trace.StreamingTracer`` is the bounded-memory variant for long
+    open-loop fleet runs: a ring buffer spilled incrementally to a
+    JSON Lines file, auditable with the same auditor.
   * ``metrics.Metrics`` — registry of counters / gauges / histograms
     with a DDSketch-style streaming quantile sketch (p50/p95/p99);
     one ``snapshot()``/``reset()`` API absorbing the stack's formerly
-    ad hoc counters.
+    ad hoc counters; fleet-wide union via ``Metrics.merged`` (exact
+    sketch merge) and Prometheus text export via ``to_prometheus``.
   * ``audit`` — trace-replay auditor re-verifying the serving
-    invariants from a trace alone (``python -m repro.obs.audit``).
+    invariants from a trace alone (``python -m repro.obs.audit``);
+    reads both export formats.
 
 This package imports nothing from ``core`` or ``serving`` (no jax), so
 any layer may depend on it.
 """
 from .audit import (AuditReport, audit_doc, audit_file,  # noqa: F401
-                    audit_tracer, validate_chrome)
+                    audit_tracer, jsonl_to_chrome, validate_chrome)
 from .metrics import Metrics, QuantileSketch  # noqa: F401
-from .trace import Tracer, TraceEvent  # noqa: F401
+from .trace import StreamingTracer, Tracer, TraceEvent  # noqa: F401

@@ -31,9 +31,10 @@ overlap in simulated time):
 Run from the command line against an exported trace::
 
     python -m repro.obs.audit /tmp/trace.json
+    python -m repro.obs.audit /tmp/trace.jsonl     # StreamingTracer output
 
 exits 0 when clean, 1 on invariant violations, 2 on a schema-invalid
-trace (not Chrome trace-event JSON).
+trace (not Chrome trace-event JSON, nor StreamingTracer JSON Lines).
 """
 from __future__ import annotations
 
@@ -42,7 +43,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 __all__ = ["AuditReport", "validate_chrome", "audit_doc", "audit_tracer",
-           "audit_file"]
+           "audit_file", "jsonl_to_chrome"]
 
 _PHASES = {"X", "i", "M"}
 
@@ -267,11 +268,79 @@ def audit_tracer(tracer, *, max_staleness: int = 1,
                      max_staleness=max_staleness)
 
 
-def audit_file(path, *, max_staleness: int = 1) -> AuditReport:
-    """Validate + audit an exported trace file. Schema errors are
-    reported as violations prefixed ``schema:``."""
+def jsonl_to_chrome(path) -> dict:
+    """Load a ``StreamingTracer`` JSON Lines file into a Chrome
+    trace-event doc (Perfetto-loadable and ``audit_doc``-able).
+
+    Each line is one event record carrying its track by *name*; this
+    loader assigns tids from the sorted track-name set, prepends the
+    ``ph="M"`` metadata events, and sorts by ``(ts, seq)`` exactly like
+    ``Tracer.to_chrome``. A ``{"otherData": ...}`` line (written by
+    ``StreamingTracer.close``) becomes the doc's ``otherData``.
+    Raises ``ValueError`` on a malformed line.
+    """
+    events: List[dict] = []
+    other = None
     with open(path) as f:
-        doc = json.load(f)
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"line {ln}: not JSON — {e}") from None
+            if not isinstance(rec, dict):
+                raise ValueError(f"line {ln}: not an object")
+            if "otherData" in rec and "ph" not in rec:
+                other = rec["otherData"]
+                continue
+            events.append(rec)
+    tracks = sorted({e.get("track", "engine") for e in events})
+    tids = {name: i + 1 for i, name in enumerate(tracks)}
+    out = [{"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+            "ts": 0, "args": {"name": "EMSServe"}}]
+    for name, tid in tids.items():
+        out.append({"ph": "M", "name": "thread_name", "pid": 1,
+                    "tid": tid, "ts": 0, "args": {"name": name}})
+    for e in sorted(events, key=lambda e: (e.get("ts", 0),
+                                           e.get("args", {}).get("seq", 0))):
+        ev = dict(e)
+        ev["pid"] = 1
+        ev["tid"] = tids[ev.pop("track", "engine")]
+        if ev.get("ph") == "i":
+            ev.setdefault("s", "t")
+        out.append(ev)
+    doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+    if other:
+        doc["otherData"] = other
+    return doc
+
+
+def _load_any(path) -> dict:
+    """Load a trace file in either format: Chrome JSON object or
+    StreamingTracer JSON Lines (sniffed by suffix, then by content)."""
+    if str(path).endswith(".jsonl"):
+        return jsonl_to_chrome(path)
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError:
+            return jsonl_to_chrome(path)
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return doc
+    # a one-line JSONL file parses as plain JSON but is not a trace doc
+    return jsonl_to_chrome(path)
+
+
+def audit_file(path, *, max_staleness: int = 1) -> AuditReport:
+    """Validate + audit an exported trace file (Chrome JSON or
+    StreamingTracer JSONL). Schema errors are reported as violations
+    prefixed ``schema:``."""
+    try:
+        doc = _load_any(path)
+    except ValueError as e:
+        return AuditReport(violations=[f"schema: {e}"])
     errs = validate_chrome(doc)
     if errs:
         return AuditReport(violations=[f"schema: {e}" for e in errs])
@@ -283,17 +352,17 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.obs.audit",
         description="Re-verify serving invariants from a trace file.")
-    p.add_argument("path", help="Chrome trace-event JSON exported "
-                                "by repro.obs.Tracer")
+    p.add_argument("path", help="Chrome trace-event JSON exported by "
+                                "repro.obs.Tracer, or JSON Lines from "
+                                "repro.obs.StreamingTracer")
     p.add_argument("--max-staleness", type=int, default=1)
     args = p.parse_args(argv)
 
-    with open(args.path) as f:
-        try:
-            doc = json.load(f)
-        except json.JSONDecodeError as e:
-            print(f"schema: not JSON — {e}")
-            return 2
+    try:
+        doc = _load_any(args.path)
+    except ValueError as e:
+        print(f"schema: {e}")
+        return 2
     errs = validate_chrome(doc)
     if errs:
         for e in errs:

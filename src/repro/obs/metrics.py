@@ -191,6 +191,77 @@ class Metrics:
     def histogram(self, name: str) -> Optional[QuantileSketch]:
         return self._hists.get(name)
 
+    # ---- merge ------------------------------------------------------
+    @classmethod
+    def merged(cls, registries) -> "Metrics":
+        """Exact fleet-wide union of registries: counters and gauges
+        sum (callable gauges are sampled), histograms merge through
+        ``QuantileSketch.merge`` — associative and commutative on the
+        bucket state, so N replicas' sketches fold into the same
+        fleet-wide quantiles regardless of merge order."""
+        regs = list(registries)
+        if not regs:
+            return cls()
+        rel_err = regs[0].rel_err
+        if any(r.rel_err != rel_err for r in regs):
+            raise ValueError("cannot merge registries with different "
+                             "rel_err")
+        out = cls(rel_err=rel_err)
+        for r in regs:
+            for k, v in r._counters.items():
+                out._counters[k] = out._counters.get(k, 0) + v
+            gauges = dict(r._gauges)
+            for k, fn in r._gauge_fns.items():
+                gauges[k] = fn()
+            for k, v in gauges.items():
+                out._gauges[k] = out._gauges.get(k, 0) + v
+            for k, h in r._hists.items():
+                cur = out._hists.get(k)
+                out._hists[k] = h.merge(cur) if cur is not None else \
+                    h.merge(QuantileSketch(rel_err))
+        return out
+
+    # ---- export -----------------------------------------------------
+    def to_prometheus(self, *, prefix: str = "emsserve") -> str:
+        """Prometheus text exposition format (version 0.0.4).
+
+        Counters export as ``counter``, gauges as ``gauge``, and each
+        quantile sketch as a ``summary`` (p50/p95/p99 + ``_sum`` /
+        ``_count``). Metric names are sanitized (dots and dashes to
+        underscores) and prefixed; output is sorted and deterministic.
+        """
+        def name(k):
+            base = "".join(c if (c.isalnum() or c == "_") else "_"
+                           for c in k)
+            return f"{prefix}_{base}" if prefix else base
+
+        def num(v):
+            return repr(float(v))
+
+        lines = []
+        for k in sorted(self._counters):
+            n = name(k)
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {num(self._counters[k])}")
+        gauges = dict(self._gauges)
+        for k, fn in self._gauge_fns.items():
+            gauges[k] = fn()
+        for k in sorted(gauges):
+            n = name(k)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {num(gauges[k])}")
+        for k in sorted(self._hists):
+            h = self._hists[k]
+            n = name(k)
+            lines.append(f"# TYPE {n} summary")
+            if h.count:
+                for q in (0.5, 0.95, 0.99):
+                    lines.append(f'{n}{{quantile="{q}"}} '
+                                 f"{num(h.quantile(q))}")
+            lines.append(f"{n}_sum {num(h.sum)}")
+            lines.append(f"{n}_count {h.count}")
+        return "\n".join(lines) + "\n"
+
     # ---- lifecycle --------------------------------------------------
     def snapshot(self) -> dict:
         gauges = dict(self._gauges)

@@ -66,6 +66,13 @@ an exported trace and re-verifies the serving invariants (exactly-one
 commit, <=1-step staleness, byte conservation incl. cancelled flights,
 no emit before its inputs) from the file alone.
 
+Fleet scale lives one package up (``repro.fleet``): ``RegionSim``
+replays seeded open-loop Poisson/diurnal incident arrivals against N
+replicas of ONE ``build_engine`` spec over mesh-placed params, with
+consistent-hash routing and deadline-hysteresis admission control that
+sheds overload to on-glass ``degraded``-tagged partials (launcher:
+``--fleet RATE --replicas N``; benchmark: ``benchmarks/fleet_load.py``).
+
 Historical constructors remain as thin shims over the same engine:
 
   * ``batch_engine.BatchedEMSServe`` — the ``"batch"`` construction;
