@@ -58,7 +58,14 @@ Acceptance (checked by ``--smoke``):
     ZERO duplicate cache commits and bit-equal finals;
   * chaos: a seeded crash/rejoin schedule over both remote tiers
     replays with bit-equal finals, <=1-step staleness, zero
-    duplicate/stale commits, and >= 1 completed rejoin cycle.
+    duplicate/stale commits, and >= 1 completed rejoin cycle;
+  * quantized: on a low-uplink regime past the paper's sweep (28 m
+    NLOS), joint precision+placement (``precision={"edge": "int8"}``)
+    strictly beats the fp32 adaptive baseline, the packed features
+    shipped on offloaded events weigh >= 3x less than their raw fp32
+    form, an all-fp32 precision map replays bit-identically to the
+    precision-off legacy path, and the int8 accuracy deltas on the
+    Table-3 tasks are reported.
 
 -> artifacts/BENCH_tiered.json
 """
@@ -141,6 +148,27 @@ def _run(splits, params, profile_table, trace, eps, payloads, *,
                      crash_at=crash_at, rejoin_at=rejoin_at,
                      schedule=schedule)
     return eng
+
+
+def _quantized_accuracy(quick, seed=0):
+    """Table-3 task metrics for a trained text+vitals model, fp32 vs
+    the int8 sidecar pytree — the accuracy cost of serving the
+    quantized tier, on the paper's protocol/medicine/quantity tasks."""
+    from repro.data import synthetic_nemsis as D
+    from repro.models.quantized import quantize_emsnet_params
+    from repro.training import emsnet_trainer as ET
+    tcfg = C.emsnet_cfg(quick, train=True)
+    n, steps = (800, 80) if quick else (8000, 400)
+    tr, _, te = D.splits(D.generate(tcfg, n, seed=seed))
+    ld = D.loader(tr, 64, modalities=("text", "vitals"))
+    params, _ = ET.train(tcfg, ld, modalities=("text", "vitals"),
+                         steps=steps)
+    m32 = ET.evaluate(params, tcfg, te, ("text", "vitals"))
+    m8 = ET.evaluate(quantize_emsnet_params(params), tcfg, te,
+                     ("text", "vitals"))
+    return ({k: float(m32[k]) for k in m32},
+            {k: float(m8[k]) for k in m8},
+            {k: float(m8[k] - m32[k]) for k in m32})
 
 
 def _summary(eng):
@@ -541,6 +569,83 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
               f"redispatch={chaos_eng.redispatch_count};"
               f"parity={result['chaos']['finals_match_full_atol0']}")
 
+    # ---- quantized glass tier: bytes-aware precision+placement
+    # co-decision on a low-uplink regime past the paper's sweep (28 m
+    # NLOS — feature transport dominates the offload decision, the
+    # regime quantization exists for). Three adaptive runs over the
+    # identical workload:
+    #   fp32     — today's path, precision off (the legacy engine);
+    #   fp32_map — precision={"edge": "fp32"}: an all-fp32 map DISARMS
+    #              the precision rung, so this pins the bit-identity
+    #              contract at benchmark scale;
+    #   int8     — precision={"edge": "int8"}: the policy enumerates
+    #              (tier, precision) jointly, offloaded encoders run
+    #              the int8 sidecar params, features ship packed.
+    from repro.core import payload_nbytes
+    from repro.models.quantized import quantize_feature
+    low_tr = BandwidthTrace.static(nlos_bandwidth(28.0))
+    qruns = {lbl: _run(splits, params, table, low_tr, zoo_eps, payloads,
+                       **kw)
+             for lbl, kw in (("fp32", {}),
+                             ("fp32_map", {"precision": {"edge": "fp32"}}),
+                             ("int8", {"precision": {"edge": "int8"}}))}
+    qlat = {k: e.total_latency_s() for k, e in qruns.items()}
+    legacy_ok = (
+        qlat["fp32"] == qlat["fp32_map"]
+        and [(r.tier, r.t_emit, r.precision) for r in qruns["fp32"].records]
+        == [(r.tier, r.t_emit, r.precision)
+            for r in qruns["fp32_map"].records]
+        and all(np.array_equal(a.outputs[k], b.outputs[k])
+                for a, b in zip(qruns["fp32"].records,
+                                qruns["fp32_map"].records)
+                if a.outputs is not None and b.outputs is not None
+                for k in a.outputs))
+    # feature-transport weight per offloaded event: raw fp32 feature
+    # vs the packed form actually shipped. Encoders are deterministic
+    # per modality payload, so the per-event wire weight is exact —
+    # and it is payload_nbytes on the real arrays, the same rule the
+    # transport charges with.
+    raw_feats = {m: full.encoders[m](shared, payloads[m])
+                 for m in full.modalities()}
+    packed_nb = {m: payload_nbytes(quantize_feature(f))
+                 for m, f in raw_feats.items()}
+    off = [r for r in qruns["int8"].records
+           if r.enc_tier not in (None, "glass")]
+    off8 = [r for r in off if r.precision == "int8"]
+    raw_b = sum(payload_nbytes(raw_feats[r.modality]) for r in off8)
+    packed_b = sum(packed_nb[r.modality] for r in off8)
+    shrink = (raw_b / packed_b) if packed_b else 0.0
+    q_finals_ok = all(
+        any(r.kind == "final" and r.outputs is not None
+            for r in qruns["int8"].sessions[sid].records)
+        for sid in zoo_eps)
+    acc32, acc8, acc_d = _quantized_accuracy(quick or smoke, seed)
+    result["quantized"] = {
+        "regime": "low_uplink_28m",
+        **{k: _summary(e) for k, e in qruns.items()},
+        "offloaded_events": len(off),
+        "offloaded_int8_events": len(off8),
+        "feature_bytes_raw": {m: payload_nbytes(f)
+                              for m, f in raw_feats.items()},
+        "feature_bytes_packed": packed_nb,
+        "offloaded_feature_bytes": {"fp32": raw_b, "int8": packed_b,
+                                    "shrink_x": shrink},
+        "legacy_bit_identical_with_precision_off": bool(legacy_ok),
+        "all_sessions_reached_final": bool(q_finals_ok),
+        "table3_accuracy_fp32": acc32,
+        "table3_accuracy_int8": acc8,
+        "table3_accuracy_deltas": acc_d,
+    }
+    result["passed_quantized_transport"] = bool(
+        qlat["int8"] < qlat["fp32"]
+        and len(off8) >= 1
+        and shrink >= 3.0
+        and legacy_ok and q_finals_ok)
+    C.csv_row("tiered_quantized", qlat["int8"] * 1e6,
+              f"fp32={qlat['fp32']*1e3:.1f}ms;shrink={shrink:.2f}x;"
+              f"int8_offloads={len(off8)};"
+              f"d_protocol_top1={acc_d['protocol_top1']:+.3f}")
+
     # ---- acceptance
     paper_speedups = {r: result["regimes"][r]["speedup_adaptive_vs_glass"]
                       for r in PAPER_REGIMES if r in result["regimes"]}
@@ -579,7 +684,8 @@ def run(quick=True, *, n_sessions=None, smoke=False, seed=0):
                               "passed_3tier_beats_static",
                               "passed_rejoin_recovery",
                               "passed_speculation_beats_failover",
-                              "passed_chaos")
+                              "passed_chaos",
+                              "passed_quantized_transport")
                   if not result[k]]
         if failed:
             raise SystemExit(f"tiered acceptance failed: {failed}; "

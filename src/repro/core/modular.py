@@ -10,7 +10,7 @@ fits the same protocol.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -30,6 +30,11 @@ class MultimodalModule:
     # and run every subset tail through the FULL fusion heads in one
     # grouped call; empty when the model doesn't declare them
     feature_dims: Dict[str, int] = field(default_factory=dict)
+    # optional int8 support: fn(params) -> sidecar pytree the SAME
+    # encoder_fns accept (quantized dense leaves, fp32 rest shared by
+    # reference). None = the model has no quantized variant and a
+    # precision-enabled engine spec must reject it.
+    quantize_fn: Optional[Callable] = None
 
     def full_fn(self):
         """The monolithic forward — what a conventional framework runs."""
@@ -38,6 +43,11 @@ class MultimodalModule:
                      for m in self.modalities}
             return self.tail_fn(params, feats)
         return fn
+
+
+def _emsnet_quantize_fn():
+    from repro.models import quantized as Q
+    return Q.quantize_emsnet_params
 
 
 def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModule:
@@ -64,6 +74,7 @@ def emsnet_module(cfg, modalities=("text", "vitals", "scene")) -> MultimodalModu
         max_lengths=({"text": cfg.max_text_len} if "text" in modalities
                      else {}),
         feature_dims={m: cfg.feature_dims[m] for m in modalities},
+        quantize_fn=_emsnet_quantize_fn(),
     )
 
 
@@ -99,6 +110,7 @@ def emsnet_subset_module(cfg, subset,
         max_lengths={m: n for m, n in base.max_lengths.items()
                      if m in subset},
         feature_dims={m: base.feature_dims[m] for m in subset},
+        quantize_fn=_emsnet_quantize_fn(),
     )
 
 

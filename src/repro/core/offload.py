@@ -165,11 +165,14 @@ class SpeculationPolicy:
 
 @dataclass(frozen=True)
 class TierEstimate:
-    """One candidate tier's cost breakdown for one submodule placement."""
+    """One candidate (tier, precision)'s cost breakdown for one
+    submodule placement. ``precision`` stays ``"fp32"`` unless the
+    policy runs the joint precision+placement enumeration."""
     tier: str                  # host name
     transfer_s: float          # Δt to ship the inputs there (+ outputs home)
     queue_s: float             # current queueing delay on that host
     compute_s: float           # profiled submodule time on that tier
+    precision: str = "fp32"    # numeric precision this estimate assumes
 
     @property
     def cost(self) -> float:
@@ -184,6 +187,7 @@ class TierDecision:
     estimates: Dict[str, TierEstimate]   # every candidate evaluated
     speculate: bool = False              # deadline margin too thin: race
     margin_s: float = float("inf")       # slack the estimate left
+    precision: str = "fp32"              # precision of the chosen estimate
 
     @property
     def best_remote(self) -> "str | None":
@@ -240,6 +244,17 @@ class MultiTierPolicy:
     engine then dispatches the submodule on the local tier AND the best
     remote and commits whichever returns first. Forced and non-adaptive
     decisions never speculate (ablations must stay pinned).
+
+    ``precisions`` (host -> tuple of supported precisions, e.g.
+    ``{"glass": ("fp32", "int8")}``) arms the JOINT precision+placement
+    enumeration: the argmin then runs over (tier, precision) candidates
+    where int8 scales a tier's compute by ``int8_compute_scale`` and —
+    because int8-packed features are what ships home — scales the
+    feature-return bytes by ``int8_bytes_scale``. The winning estimate's
+    precision rides on the decision, so the engine sends quantized
+    features exactly when the uplink is the bottleneck and raw when it
+    isn't. Unset (None), every path below is BIT-IDENTICAL to the
+    precision-less rule; hosts absent from the dict are fp32-only.
     """
 
     def __init__(self, profile: ProfileTable,
@@ -247,7 +262,10 @@ class MultiTierPolicy:
                  local: str, tier_of: Dict[str, str],
                  adaptive: bool = True,
                  force: "str | Dict[str, str] | None" = None,
-                 speculation: "SpeculationPolicy | None" = None):
+                 speculation: "SpeculationPolicy | None" = None,
+                 precisions: "Dict[str, tuple] | None" = None,
+                 int8_compute_scale: float = 0.5,
+                 int8_bytes_scale: float = 0.25):
         self.profile = profile
         self.monitors = monitors            # remote host name -> its link
         self.local = local
@@ -256,6 +274,18 @@ class MultiTierPolicy:
         self.adaptive = adaptive
         self.force = force
         self.speculation = speculation
+        self.precisions = (None if precisions is None
+                           else {h: tuple(p) for h, p in precisions.items()})
+        self.int8_compute_scale = int8_compute_scale
+        self.int8_bytes_scale = int8_bytes_scale
+        if self.precisions is not None:
+            for h, ps in self.precisions.items():
+                bad = set(ps) - {"fp32", "int8"}
+                if h not in tier_of or bad:
+                    raise ValueError(
+                        f"precisions[{h!r}]={ps}: unknown host or "
+                        f"precision (hosts {sorted(tier_of)}, "
+                        "precisions fp32/int8)")
         names = set(tier_of)
         forced = (force.values() if isinstance(force, dict)
                   else [force] if force else [])
@@ -294,24 +324,59 @@ class MultiTierPolicy:
 
     def decide(self, submodule: str, payload_bytes: int, now: float, *,
                queues: "Dict[str, float] | None" = None,
-               available=None, lateness_s: float = 0.0) -> TierDecision:
+               available=None, lateness_s: float = 0.0,
+               feat_bytes: int = 0) -> TierDecision:
         """Place one submodule whose raw inputs currently sit on the
         local tier. ``available`` restricts the remote candidates (a
         crashed tier is not a candidate); ``queues`` carries each host's
         current queueing delay (omit for the contention-blind rule);
         ``lateness_s`` is serving time already burned against this
-        arrival's deadline (feeds the speculation margin)."""
+        arrival's deadline (feeds the speculation margin).
+
+        ``feat_bytes`` is the estimated fp32 size of the encoded
+        feature this submodule emits. It only enters the cost model
+        when the joint precision enumeration is armed — a remote
+        candidate then pays the feature's return trip too (scaled by
+        ``int8_bytes_scale`` for int8 candidates), which is what makes
+        the quantized variant win exactly when the radio is the
+        bottleneck. With ``precisions=None`` the estimate is the
+        legacy uplink-only Δt, bit-identical to the precision-less
+        rule."""
         q = queues or {}
         remotes = (self.remote_names if available is None
                    else [n for n in self.remote_names if n in available])
-        est = {self.local: TierEstimate(
-            self.local, 0.0, q.get(self.local, 0.0),
-            self.profile.time(submodule, self.tier_of[self.local]))}
-        for n in remotes:
-            est[n] = TierEstimate(
-                n, self.monitors[n].delta_t(payload_bytes, now),
-                q.get(n, 0.0),
-                self.profile.time(submodule, self.tier_of[n]))
+        if self.precisions is None:
+            est = {self.local: TierEstimate(
+                self.local, 0.0, q.get(self.local, 0.0),
+                self.profile.time(submodule, self.tier_of[self.local]))}
+            for n in remotes:
+                est[n] = TierEstimate(
+                    n, self.monitors[n].delta_t(payload_bytes, now),
+                    q.get(n, 0.0),
+                    self.profile.time(submodule, self.tier_of[n]))
+        else:
+            est = {}
+            for host in (self.local, *remotes):
+                t_fp32 = self.profile.time(submodule, self.tier_of[host])
+                cands = []
+                for prec in self.precisions.get(host, ("fp32",)):
+                    scale = (self.int8_compute_scale if prec == "int8"
+                             else 1.0)
+                    if host == self.local:
+                        xfer = 0.0
+                    else:
+                        fb = feat_bytes * (self.int8_bytes_scale
+                                           if prec == "int8" else 1.0)
+                        xfer = self.monitors[host].delta_t(
+                            payload_bytes + fb, now)
+                    cands.append(TierEstimate(
+                        host, xfer, q.get(host, 0.0), t_fp32 * scale,
+                        precision=prec))
+                # per-tier argmin over precisions; ties keep fp32 (no
+                # gratuitous quantization when bytes aren't the issue)
+                est[host] = min(cands,
+                                key=lambda e: (e.cost,
+                                               e.precision != "fp32"))
         # tie-break toward local: the legacy rule offloads only on a
         # STRICT win (dt + te < tg)
         pick = self._pick(submodule, est, prefer=self.local)
@@ -323,7 +388,8 @@ class MultiTierPolicy:
             spec = self.speculation.should_speculate(est[pick].cost,
                                                      lateness_s)
         return TierDecision(tier=pick, local=self.local, estimates=est,
-                            speculate=spec, margin_s=margin)
+                            speculate=spec, margin_s=margin,
+                            precision=est[pick].precision)
 
     def decide_tail(self, feat_bytes: int, out_bytes: int, enc_tier: str,
                     now: float, *, queues: "Dict[str, float] | None" = None,

@@ -13,6 +13,7 @@ import jax
 
 from . import decode_attention as _da
 from . import flash_attention as _fa
+from . import quantized as _q
 from . import rwkv6 as _rw
 
 
@@ -48,3 +49,58 @@ def decode_attention(q, kbuf, vbuf, slot_pos, t, *, window=0, block_k=256,
         interpret = _interpret_default()
     return _da.decode_attention(q, kbuf, vbuf, slot_pos, t, window=window,
                                 block_k=block_k, interpret=interpret)
+
+
+# ----------------------------------------------------------------------
+# int8 symmetric per-channel quantization (the quantized glass tier)
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def quantize_rowwise(x, *, block_m=32, interpret=None):
+    """x (M, K) f32 -> (q int8 (M, K), scale f32 (M, 1)); symmetric,
+    round-to-nearest, so |dequant(q) - x| <= scale/2 elementwise."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _q.quantize_rowwise(x, block_m=block_m, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def quantize_colwise(w, *, block_m=32, interpret=None):
+    """Per-output-channel weight quantization: w (K, N) f32 ->
+    (q int8 (K, N), scale f32 (1, N)) — the rowwise kernel on w.T."""
+    if interpret is None:
+        interpret = _interpret_default()
+    q, s = _q.quantize_rowwise(w.T, block_m=block_m, interpret=interpret)
+    return q.T, s.T
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def dequantize_rowwise(q, scale, *, block_m=32, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _q.dequantize_rowwise(q, scale, block_m=block_m,
+                                 interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def int8_matmul(xq, sx, wq, sw, *, block_m=32, block_n=128,
+                interpret=None):
+    """Fused int8 x int8 -> int32 -> scaled f32 GEMM."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _q.int8_matmul(xq, sx, wq, sw, block_m=block_m,
+                          block_n=block_n, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def quantized_matmul(x, wq, sw, *, block_m=32, block_n=128,
+                     interpret=None):
+    """fp32 activations x pre-quantized int8 weights: rowwise-quantize
+    then the fused GEMM. Leading dims of x are flattened into M."""
+    if interpret is None:
+        interpret = _interpret_default()
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out = _q.quantized_matmul(x2, wq, sw, block_m=block_m,
+                              block_n=block_n, interpret=interpret)
+    return out.reshape(lead + (wq.shape[1],))

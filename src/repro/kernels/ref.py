@@ -60,3 +60,28 @@ def rwkv6_ref(r, k, v, w, u, s0=None):
     tm = lambda a: jnp.moveaxis(f32(a), 1, 0)
     s, ys = jax.lax.scan(step, f32(s0), (tm(r), tm(k), tm(v), tm(w)))
     return jnp.moveaxis(ys, 0, 1), s
+
+
+# ----------------------------------------------------------------------
+# int8 quantization oracles
+# ----------------------------------------------------------------------
+
+def quantize_rowwise_ref(x):
+    """Per-row symmetric int8: scale = max|x|/127 (1.0 for zero rows)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul_ref(xq, sx, wq, sw):
+    """Exact int32 accumulation, then the per-row/per-channel rescale."""
+    acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    return (acc.astype(jnp.float32) * sx.astype(jnp.float32)
+            * sw.astype(jnp.float32))
+
+
+def quantized_matmul_ref(x, wq, sw):
+    xq, sx = quantize_rowwise_ref(x)
+    return int8_matmul_ref(xq, sx, wq, sw)

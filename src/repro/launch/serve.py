@@ -114,8 +114,9 @@ def _print_tiered(eng, n_sessions):
               if r.glass_partial is not None else "")
         split = (f" tail={r.tail_tier}" if r.tail_tier is not None
                  and r.tail_tier != r.enc_tier else "")
+        qz = f" [{r.precision}]" if r.precision != "fp32" else ""
         print(f"[{r.sid:4s} {r.index:2d}] {r.modality:6s} "
-              f"tier={r.tier:7s} {r.kind:7s} "
+              f"tier={r.tier:7s}{qz} {r.kind:7s} "
               f"up={r.uplink_s*1e3:6.1f}ms "
               f"compute={r.compute_s*1e3:7.1f}ms "
               f"down={r.downlink_s*1e3:6.1f}ms "
@@ -191,6 +192,8 @@ def serve_unified(args):
         raise SystemExit("--wall-clock requires a stream or tiered spec")
     if (args.speculate or args.redispatch) and not tiered:
         raise SystemExit("--speculate/--redispatch require a tiered spec")
+    if args.precision and not tiered:
+        raise SystemExit("--precision requires a tiered spec")
     if args.chaos_seed >= 0 and not tiered:
         raise SystemExit("--chaos-seed requires a tiered spec")
     if args.chaos_seed >= 0 and args.outage_at >= 0:
@@ -242,6 +245,17 @@ def serve_unified(args):
             margin_s=args.spec_margin_ms / 1e3)
     if tiered and args.redispatch:
         kw["redispatch"] = True
+    if tiered and args.precision:
+        prec = {}
+        for part in filter(None, (p.strip()
+                                  for p in args.precision.split(","))):
+            host, sep, p = part.partition("=")
+            if not sep or not host.strip() or not p.strip():
+                raise SystemExit(
+                    f"--precision: malformed entry {part!r} "
+                    "(expected HOST=fp32|int8, comma-separated)")
+            prec[host.strip()] = p.strip()
+        kw["precision"] = prec
     if tiered or stream:
         splits, params = build_zoo(cfg)          # one shared pytree
         kw["share_encoders"] = True
@@ -508,6 +522,13 @@ def main():
                     help="tiered spec: re-aim a flight lost to a tier "
                          "crash at the next-best surviving remote "
                          "instead of always re-running on glass")
+    ap.add_argument("--precision", default="", metavar="MAP",
+                    help="tiered spec: comma-separated HOST=fp32|int8 "
+                         "map (e.g. ph1=int8,edge64x=int8) arming the "
+                         "joint precision+placement co-decision: int8-"
+                         "capable hosts may run the sidecar-quantized "
+                         "encoders and ship ~4x-smaller packed features "
+                         "when the link is the bottleneck")
     ap.add_argument("--chaos-seed", type=int, default=-1, metavar="SEED",
                     help="tiered spec with --tiers: seeded random "
                          "crash/rejoin schedule over the remote tiers "

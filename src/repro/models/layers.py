@@ -27,7 +27,15 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def dense(p, x):
-    y = x @ p["w"]
+    if "w_q" in p:
+        # int8 sidecar form (models.quantized.quantize_dense_params):
+        # per-output-channel int8 weights + f32 scales. Activations are
+        # rowwise-quantized on the fly and the contraction runs through
+        # the fused int8 x int8 -> int32 -> scaled f32 Pallas GEMM.
+        from repro.kernels.ops import quantized_matmul
+        y = quantized_matmul(x, p["w_q"], p["w_scale"]).astype(x.dtype)
+    else:
+        y = x @ p["w"]
     if "b" in p:
         y = y + p["b"]
     return y

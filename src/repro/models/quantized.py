@@ -1,0 +1,82 @@
+"""int8 sidecar parameters + packed feature transport for EMSNet.
+
+Two orthogonal artifacts of the quantized glass tier live here:
+
+  * **Sidecar param pytrees** — ``quantize_emsnet_params`` derives,
+    ONCE per fp32 pytree, a structurally parallel pytree where every
+    GEMM-heavy dense weight (text ``wqkv``/``wo``/``w1``/``w2``,
+    vitals ``wx``, scene ``fc``) is replaced by its int8 per-output-
+    channel form ``{"w_q", "w_scale"(, "b")}``. Calibration is direct
+    max-abs over the trained weights (symmetric, no zero point).
+    Everything else — embeddings, layernorms, the tiny recurrent
+    ``wh``, and the fusion heads — stays fp32 and is shared BY
+    REFERENCE with the source pytree, so the id()-dedup fleet
+    placement ships each fp32 tensor once. ``layers.dense`` dispatches
+    on the sidecar form, so the unmodified encoder functions run the
+    quantized math when handed a sidecar pytree.
+  * **Packed features** — ``quantize_feature`` packs a (B, d) f32
+    feature into ``{"q": int8 (B, d), "scale": f32 (B, 1)}``, the wire
+    form whose ``payload_nbytes`` is ~4x smaller; the consuming tier
+    calls ``dequantize_feature`` before fusion. Round-trip error is
+    bounded by scale/2 per element (round-to-nearest).
+"""
+from __future__ import annotations
+
+from repro.kernels.ops import (dequantize_rowwise, quantize_colwise,
+                               quantize_rowwise)
+
+__all__ = ["quantize_dense_params", "quantize_emsnet_params",
+           "quantize_feature", "dequantize_feature",
+           "is_quantized_feature"]
+
+# the dense projections inside one BERT block that carry the FLOPs
+_TEXT_DENSE = ("wqkv", "wo", "w1", "w2")
+
+
+def quantize_dense_params(p):
+    """fp32 ``{"w"(, "b")}`` -> int8 sidecar ``{"w_q", "w_scale"(, "b")}``."""
+    wq, sw = quantize_colwise(p["w"])
+    out = {"w_q": wq, "w_scale": sw}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def quantize_emsnet_params(params):
+    """Derive the int8 sidecar pytree from a full EMSNet fp32 pytree.
+
+    Pure and deterministic — call it once and share the result; fp32
+    leaves that are not quantized are the SAME objects as in ``params``
+    (reference-shared, not copied)."""
+    q = {}
+    for name, sub in params.items():
+        if name == "text":
+            q[name] = {**sub, "blocks": [
+                {**blk, **{k: quantize_dense_params(blk[k])
+                           for k in _TEXT_DENSE}}
+                for blk in sub["blocks"]]}
+        elif name == "vitals":
+            q[name] = {**sub, "wx": quantize_dense_params(sub["wx"])}
+        elif name == "scene":
+            q[name] = {**sub, "fc": quantize_dense_params(sub["fc"])}
+        else:
+            # heads (and anything unrecognized) stay fp32, shared
+            q[name] = sub
+    return q
+
+
+def quantize_feature(f):
+    """Pack a (B, d) f32 feature into the int8 wire form."""
+    qv, s = quantize_rowwise(f)
+    return {"q": qv, "scale": s}
+
+
+def is_quantized_feature(f) -> bool:
+    return isinstance(f, dict) and set(f) == {"q", "scale"}
+
+
+def dequantize_feature(f):
+    """Unpack the wire form back to f32; identity on raw features."""
+    if not is_quantized_feature(f):
+        return f
+    return dequantize_rowwise(f["q"], f["scale"])

@@ -31,6 +31,13 @@ __all__ = ["QuantileSketch", "Metrics"]
 # values below this land in the exact zero bucket (log would diverge)
 _ZERO_EPS = 1e-12
 
+# log_gamma ratios within this of an integer snap to it before ceil:
+# a value that far inside a bucket boundary is within a relative
+# gamma^1e-9 - 1 (~1e-11 at rel_err=0.01) of the boundary itself, far
+# below any rel_err the sketch accepts, so snapping never misassigns a
+# genuinely interior value.
+_BOUNDARY_EPS = 1e-9
+
 
 class QuantileSketch:
     """DDSketch-style streaming quantile sketch for non-negative values."""
@@ -59,7 +66,19 @@ class QuantileSketch:
         if v < _ZERO_EPS:
             self._zero += 1
         else:
-            i = math.ceil(math.log(v) / self._log_gamma)
+            # Bucket i covers (gamma^(i-1), gamma^i]. A value sitting
+            # exactly on a boundary (v == gamma^i) has ratio == i in
+            # exact arithmetic, but float slop in log()/division can
+            # push it infinitesimally above i, and ceil then lands it
+            # in bucket i+1 — whose midpoint breaks the advertised
+            # |q̂ - q| <= rel_err*q bound. Snap near-integer ratios
+            # before taking ceil.
+            ratio = math.log(v) / self._log_gamma
+            nearest = round(ratio)
+            if abs(ratio - nearest) < _BOUNDARY_EPS:
+                i = int(nearest)
+            else:
+                i = math.ceil(ratio)
             self._buckets[i] = self._buckets.get(i, 0) + 1
         self._count += 1
         self._sum += v
@@ -229,30 +248,53 @@ class Metrics:
         quantile sketch as a ``summary`` (p50/p95/p99 + ``_sum`` /
         ``_count``). Metric names are sanitized (dots and dashes to
         underscores) and prefixed; output is sorted and deterministic.
+
+        Sanitization is lossy (``cache.hits`` and ``cache_hits`` both
+        map to ``cache_hits``), so distinct registry keys — or the same
+        key registered as two kinds — could collide into one exported
+        name, emitting duplicate ``# TYPE`` lines that scrapers reject.
+        Collisions are disambiguated deterministically with a numeric
+        suffix (``_2``, ``_3``, ...) in sorted-key order, so every
+        exported name carries exactly one ``# TYPE`` line.
         """
-        def name(k):
+        gauges = dict(self._gauges)
+        for k, fn in self._gauge_fns.items():
+            gauges[k] = fn()
+
+        def _sanitize(k):
             base = "".join(c if (c.isalnum() or c == "_") else "_"
                            for c in k)
             return f"{prefix}_{base}" if prefix else base
+
+        names: Dict[tuple, str] = {}
+        used = set()
+        for kind, keys in (("counter", sorted(self._counters)),
+                           ("gauge", sorted(gauges)),
+                           ("summary", sorted(self._hists))):
+            for k in keys:
+                n = _sanitize(k)
+                cand, suffix = n, 2
+                while cand in used:
+                    cand = f"{n}_{suffix}"
+                    suffix += 1
+                used.add(cand)
+                names[(kind, k)] = cand
 
         def num(v):
             return repr(float(v))
 
         lines = []
         for k in sorted(self._counters):
-            n = name(k)
+            n = names[("counter", k)]
             lines.append(f"# TYPE {n} counter")
             lines.append(f"{n} {num(self._counters[k])}")
-        gauges = dict(self._gauges)
-        for k, fn in self._gauge_fns.items():
-            gauges[k] = fn()
         for k in sorted(gauges):
-            n = name(k)
+            n = names[("gauge", k)]
             lines.append(f"# TYPE {n} gauge")
             lines.append(f"{n} {num(gauges[k])}")
         for k in sorted(self._hists):
             h = self._hists[k]
-            n = name(k)
+            n = names[("summary", k)]
             lines.append(f"# TYPE {n} summary")
             if h.count:
                 for q in (0.5, 0.95, 0.99):

@@ -49,6 +49,25 @@ the best surviving remote; ``chaos`` generates seeded, validated
 crash/rejoin schedules that ``inject_schedule`` replays. All of it
 defaults OFF — historical timelines never race.
 
+Quantized precision tier (``PlacementPolicy.precision``, default
+``None``): a ``{host: "fp32" | "int8"}`` map arms joint
+(tier, precision) enumeration in ``core.offload.MultiTierPolicy`` —
+an int8 candidate halves the remote encoder clock
+(``int8_compute_scale``) and quarters the returned feature bytes
+(``int8_bytes_scale``), so the argmin ships packed features exactly
+when the uplink is the bottleneck. int8 flights run the UNMODIFIED
+jitted encoders over a sidecar param pytree
+(``models.quantized.quantize_emsnet_params`` — GEMM-heavy denses as
+``{"w_q", "w_scale"}``, everything else fp32 shared by reference,
+derived once per fp32 pytree and cached by id()), return
+``{"q", "scale"}`` packed features (~4x smaller ``payload_nbytes``),
+and the FeatureCache commits the packed form with staleness semantics
+unchanged — consumers dequantize before fusion. Precision rides the
+flight: racers run at the decided precision and crash re-dispatch
+preserves it. Every model in a precision-armed spec must declare a
+``quantize_fn``; an all-fp32 map disarms to the bit-identical legacy
+path. The launcher flag is ``--precision ph1=int8,edge64x=int8``.
+
 Observability (``repro.obs``, defaults OFF): every engine carries a
 ``Metrics`` registry — the stack's formerly ad hoc counters
 (``duplicate_commits``, ``cancelled_bytes``, placement tallies, ...)

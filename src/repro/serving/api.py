@@ -68,7 +68,7 @@ from __future__ import annotations
 import math
 import time
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -82,6 +82,7 @@ from repro.core.offload import (BandwidthTrace, HeartbeatMonitor,
                                 MultiTierPolicy, ProfileTable, TierDecision,
                                 SpeculationPolicy)
 from repro.core.splitter import SplitModel, select_model
+from repro.models.quantized import dequantize_feature, quantize_feature
 from repro.obs import Metrics, Tracer
 from repro.serving.transport import TierFabric, payload_nbytes
 
@@ -288,6 +289,10 @@ class TieredRecord:
     speculative: bool = False
     race_winner: Optional[str] = None
     race_loser_emit: Optional[float] = None
+    # numeric precision the encoder flight ran at ("fp32" | "int8") —
+    # int8 means the sidecar-quantized encoder computed the feature and
+    # the cache/wire carry its packed {"q", "scale"} form
+    precision: str = "fp32"
 
     @property
     def latency_s(self) -> float:
@@ -390,7 +395,21 @@ class PlacementPolicy:
       * ``redispatch`` — when a tier dies with a flight outstanding,
         re-dispatch the lost flight to the next-best SURVIVING remote
         (falling back to glass only when none exists) instead of
-        always re-running on glass."""
+        always re-running on glass.
+
+    ``precision`` arms the quantized tier rung (OFF by default —
+    ``None`` keeps every timeline bit-identical to the precision-less
+    engine): a ``{host: "int8"}`` dict declares which hosts may run the
+    int8 sidecar-quantized encoders. The placement argmin then
+    enumerates (tier, precision) candidates JOINTLY — an int8 candidate
+    scales a tier's encoder compute by ``int8_compute_scale`` and its
+    feature-return bytes by ``int8_bytes_scale`` (the estimate; real
+    flights ship the real packed bytes) — so the engine sends quantized
+    features exactly when the uplink is the bottleneck and raw ones
+    when it isn't. int8 flights commit the packed ``{"q", "scale"}``
+    feature form to the cache (staleness semantics unchanged); consuming
+    tails dequantize at gather time. Every model in the zoo must
+    declare a ``quantize_fn`` or the engine refuses to build."""
     profile: ProfileTable
     trace: BandwidthTrace
     tiers: Optional[Tuple[str, ...]] = None
@@ -405,6 +424,9 @@ class PlacementPolicy:
     tail_placement: Optional[bool] = None       # None = on iff N-tier
     speculation: Optional[SpeculationPolicy] = None
     redispatch: bool = False
+    precision: Optional[Dict[str, str]] = None  # host -> "fp32" | "int8"
+    int8_compute_scale: float = 0.5
+    int8_bytes_scale: float = 0.25
 
 
 @dataclass
@@ -560,11 +582,42 @@ class EMSServeEngine:
                                      latency_s=pp.link_latency_s,
                                      metrics=self.metrics,
                                      tracer=self.tracer)
+            # ---- quantized tier rung: validate the precision map up
+            # front (a bad host name or a zoo without quantize_fn is a
+            # configuration error, not a first-decision surprise), then
+            # arm the policy's joint (tier, precision) enumeration only
+            # when some host actually serves int8 — an all-fp32 map is
+            # the legacy bit-identical rule
+            prec_cfg = dict(pp.precision or {})
+            for h, p in prec_cfg.items():
+                if h not in names or p not in ("fp32", "int8"):
+                    raise ValueError(
+                        f"precision[{h!r}]={p!r}: unknown host or "
+                        f"precision (hosts {sorted(names)}, "
+                        "precisions fp32/int8)")
+            int8_hosts = sorted(h for h, p in prec_cfg.items()
+                                if p == "int8")
+            if int8_hosts:
+                for mname, sm in models.items():
+                    if sm.module.quantize_fn is None:
+                        raise ValueError(
+                            f"precision={prec_cfg} needs an int8 variant "
+                            f"of every model; {mname!r} declares no "
+                            "quantize_fn")
+            self.int8_compute_scale = pp.int8_compute_scale
+            # fp32 pytree id() -> derived int8 sidecar pytree: derived
+            # ONCE per distinct parameter pytree, so share_encoders zoos
+            # (one pytree for the whole zoo) quantize exactly once
+            self._qparams_cache: Dict[int, dict] = {}
             self.policy = MultiTierPolicy(
                 pp.profile, self.monitors, local=self.local_name,
                 tier_of={n: h.tier for n, h in self.hosts.items()},
                 adaptive=pp.adaptive, force=pp.force,
-                speculation=pp.speculation)
+                speculation=pp.speculation,
+                precisions=({h: ("fp32", "int8") for h in int8_hosts}
+                            if int8_hosts else None),
+                int8_compute_scale=pp.int8_compute_scale,
+                int8_bytes_scale=pp.int8_bytes_scale)
             self.redispatch = pp.redispatch
             # the fastest remote is the legacy 'edge' for the 2-tier
             # accessor surface (uplink/downlink/crash_at/...)
@@ -1355,13 +1408,29 @@ class EMSServeEngine:
                 return b
         return payload_nbytes(payload)
 
-    def _enc_duration(self, m: str, n_runners: int, host: TierHost) -> float:
+    def _enc_duration(self, m: str, n_runners: int, host: TierHost,
+                      precision: str = "fp32") -> float:
         """Simulated seconds the tier spends encoding modality ``m`` for
         ``n_runners`` consuming models: expensive text encoders run in
         parallel, cheap ones serially (paper Fig. 8-right — matching
-        ``core.engine.EMSServe``)."""
+        ``core.engine.EMSServe``). int8 flights scale by the SAME
+        ``int8_compute_scale`` the placement estimate used, so the
+        decision and the booking agree."""
         per = host.time(f"enc:{m}")
+        if precision == "int8":
+            per *= self.int8_compute_scale
         return per if m == "text" else per * n_runners
+
+    def _feat_bytes_est(self, m: str) -> int:
+        """A-priori fp32 size of modality ``m``'s encoded feature (the
+        declared feature width x 4 bytes) — what the joint precision
+        enumeration scales by ``int8_bytes_scale`` BEFORE the encoder
+        has run. Real flights then ship the real packed bytes."""
+        for _n, sm in self._consumers(m):
+            d = sm.module.feature_dims.get(m)
+            if d:
+                return 4 * int(d)
+        return 0
 
     # ----------------------------------------------------- real numerics
     #
@@ -1370,14 +1439,37 @@ class EMSServeEngine:
     # the math) yet leave the glass-side cache untouched when the edge
     # dies before its result makes it back.
 
-    def _run_encoders(self, st: SessionView, m: str) -> Dict[str, object]:
+    def _quantized_params(self, name: str) -> dict:
+        """The int8 sidecar pytree for model ``name``, derived lazily
+        and cached per DISTINCT fp32 pytree (id()-keyed): a
+        share_encoders zoo whose subsets all alias one parameter pytree
+        quantizes once total. The sidecar's fp32 leaves are shared by
+        reference with the source, so nothing doubles in memory but the
+        int8 weights themselves."""
+        src = self.params[name]
+        qp = self._qparams_cache.get(id(src))
+        if qp is None:
+            qp = self._qparams_cache[id(src)] = \
+                self.models[name].quantize_params(src)
+        return qp
+
+    def _run_encoders(self, st: SessionView, m: str,
+                      precision: str = "fp32") -> Dict[str, object]:
         """Real jitted encoder run(s) for the arriving modality; returns
-        ``{model_name: feature}`` WITHOUT touching the cache."""
+        ``{model_name: feature}`` WITHOUT touching the cache. An int8
+        flight runs the SAME jitted encoder over the sidecar pytree
+        (``layers.dense`` dispatches on the leaf form) and returns the
+        packed ``{"q", "scale"}`` wire form — what the cache commits
+        and the downlink sizes."""
         consumers = self._consumers(m)
         if not consumers:
             return {}
         runners = consumers[:1] if self.share_encoders else consumers
         enc_in = self._bucketed(m, st.inputs[m])
+        if precision == "int8":
+            return {name: quantize_feature(
+                        sm.encoders[m](self._quantized_params(name), enc_in))
+                    for name, sm in runners}
         return {name: sm.encoders[m](self.params[name], enc_in)
                 for name, sm in runners}
 
@@ -1397,9 +1489,12 @@ class EMSServeEngine:
                  else feats.get(model_name))
         out = {}
         consumed = {}
+        # packed int8 features (fresh or cached) unpack here, at the
+        # consuming tier, right before fusion; raw features pass through
+        # untouched (dequantize_feature is the identity on them)
         for mm in sm.modalities():
             if mm == m and fresh is not None:
-                out[mm] = fresh
+                out[mm] = dequantize_feature(fresh)
                 # the fresh feature carries this very step; its commit
                 # lands before the fuse is recorded
                 consumed[mm] = [st.step, st.input_step.get(mm, st.step)]
@@ -1407,7 +1502,7 @@ class EMSServeEngine:
             e = self.cache.get(key, mm, input_step=st.input_step.get(mm))
             if e is None:
                 return None
-            out[mm] = e.feature
+            out[mm] = dequantize_feature(e.feature)
             consumed[mm] = [e.step, st.input_step.get(mm, e.step)]
         if self.tracer:
             self._last_consumed = consumed
@@ -1454,12 +1549,18 @@ class EMSServeEngine:
         queues = self._queues(now)
         dec = self.policy.decide(f"enc:{event.modality}", payload_b, now,
                                  queues=queues, available=avail,
-                                 lateness_s=max(0.0, now - t_a))
+                                 lateness_s=max(0.0, now - t_a),
+                                 feat_bytes=self._feat_bytes_est(
+                                     event.modality))
         if self.tracer:
+            # the precision attr only appears when the joint rung is
+            # armed, so precision-less traces stay byte-identical
+            extra = ({"precision": dec.precision}
+                     if self.policy.precisions is not None else {})
             self.tracer.instant("decide", "placement", now, track=sess,
                                 sid=sid, submodule=f"enc:{event.modality}",
                                 tier=dec.tier, speculate=dec.speculate,
-                                best_remote=dec.best_remote)
+                                best_remote=dec.best_remote, **extra)
 
         partial = None
         if dec.speculate and dec.best_remote is not None:
@@ -1551,6 +1652,7 @@ class EMSServeEngine:
                                     input_steps=st.input_step)
         if feats is None:
             return None
+        feats = {mm: dequantize_feature(f) for mm, f in feats.items()}
         outputs = sm.tail(self.params[name], feats)
         _start, done = self.glass.occupy(self.glass.time("tail"), now,
                                          label="tail@glass:provisional")
@@ -1641,6 +1743,10 @@ class EMSServeEngine:
                     queues=self._queues(t_detect), available=survivors)
                 B = dec2.best_remote
                 if B is not None:
+                    # the re-aimed flight reuses the dead tier's
+                    # already-computed arrays, so it keeps the original
+                    # decision's precision whatever the survivors prefer
+                    dec2 = replace(dec2, precision=dec.precision)
                     self.metrics.inc("placement.redispatches")
                     if self.tracer:
                         self.tracer.instant(
@@ -1677,8 +1783,11 @@ class EMSServeEngine:
         up_ch = self.fabric.channel(local, A)
         down_ch = self.fabric.channel(A, local)
 
-        # ---- real numerics once; the racers share the arrays
-        feats = self._run_encoders(st, m)
+        # ---- real numerics once; the racers share the arrays (and the
+        # decision's precision — it is a property of the flight, not of
+        # either host, so the committed result is identical whichever
+        # side wins)
+        feats = self._run_encoders(st, m, dec.precision)
         outputs = None
         if model_name is not None:
             gathered = self._gather(st, model_name, m, feats)
@@ -1687,7 +1796,8 @@ class EMSServeEngine:
                     self.params[model_name], gathered)
 
         # ---- glass racer: always booked (the hedge that cannot crash)
-        g_dur = (self._enc_duration(m, len(feats), self.glass)
+        g_dur = (self._enc_duration(m, len(feats), self.glass,
+                                    dec.precision)
                  if feats else 0.0)
         if outputs is not None:
             g_dur += self.glass.time("tail")
@@ -1697,7 +1807,8 @@ class EMSServeEngine:
         # downlink are PLANNED via eta() so a loss unwinds cleanly
         sync_b, synced = self._sync_bytes(A, st, model_name, skip=m)
         up = up_ch.send(payload_b + sync_b, now)
-        r_dur = self._enc_duration(m, len(feats), host) if feats else 0.0
+        r_dur = (self._enc_duration(m, len(feats), host, dec.precision)
+                 if feats else 0.0)
         if outputs is not None:
             r_dur += host.time("tail")
         down_b = sum(payload_nbytes(f) for f in feats.values())
@@ -1784,7 +1895,7 @@ class EMSServeEngine:
             decision=dec, outputs=outputs, enc_tier=winner,
             tail_tier=winner if outputs is not None else None,
             speculative=True, race_winner=winner,
-            race_loser_emit=loser_emit)
+            race_loser_emit=loser_emit, precision=dec.precision)
 
     def _glass_event(self, st: SessionView, event: Event,
                      model_name: Optional[str], now: float,
@@ -1794,7 +1905,7 @@ class EMSServeEngine:
         m = event.modality
         local = self.local_name
         if feats is None:
-            feats = self._run_encoders(st, m)
+            feats = self._run_encoders(st, m, dec.precision)
         self._commit_features(st, m, feats, tier=local)
         if outputs is None and model_name is not None:
             gathered = self._gather(st, model_name, m, feats)
@@ -1803,7 +1914,7 @@ class EMSServeEngine:
                     self.params[model_name], gathered)
         if outputs is not None:
             self._touch_consumed(st, model_name)
-        dur = (self._enc_duration(m, len(feats), self.glass)
+        dur = (self._enc_duration(m, len(feats), self.glass, dec.precision)
                if feats else 0.0)
         if outputs is not None:
             dur += self.glass.time("tail")
@@ -1820,7 +1931,8 @@ class EMSServeEngine:
             t_arrival=event.arrival_time, t_start=start, t_emit=done,
             compute_s=dur, fallback=fallback, detect_s=detect_s,
             decision=dec, outputs=outputs, enc_tier=local,
-            tail_tier=local if outputs is not None else None)
+            tail_tier=local if outputs is not None else None,
+            precision=dec.precision)
 
     def _remote_event(self, st: SessionView, event: Event,
                       model_name: Optional[str], payload_b: int,
@@ -1842,13 +1954,14 @@ class EMSServeEngine:
 
         # ---- real numerics (uncommitted) + simulated remote compute
         if feats is None:
-            feats = self._run_encoders(st, m)
+            feats = self._run_encoders(st, m, dec.precision)
             if model_name is not None:
                 gathered = self._gather(st, model_name, m, feats)
                 if gathered is not None:
                     outputs = self.models[model_name].tail(
                         self.params[model_name], gathered)
-        dur = self._enc_duration(m, len(feats), host) if feats else 0.0
+        dur = (self._enc_duration(m, len(feats), host, dec.precision)
+               if feats else 0.0)
         if outputs is not None:
             dur += host.time("tail")
         _start, t_done = host.occupy(dur, up.t_deliver)
@@ -1893,7 +2006,8 @@ class EMSServeEngine:
             downlink_s=down.t_deliver - t_done,
             compute_s=dur, fallback=fallback, detect_s=detect_s,
             decision=dec, outputs=outputs,
-            enc_tier=A, tail_tier=A if outputs is not None else None)
+            enc_tier=A, tail_tier=A if outputs is not None else None,
+            precision=dec.precision)
 
     # ------------------------------------------- per-submodule placement
 
@@ -1923,8 +2037,10 @@ class EMSServeEngine:
             return self._remote_event(st, event, model_name, payload_b,
                                       now, dec, A)
         # real numerics first: the tail decision weighs the ACTUAL
-        # feature/output byte sizes (placement never changes the math)
-        feats = self._run_encoders(st, m)
+        # feature/output byte sizes (placement never changes the math) —
+        # for an int8 flight that is the PACKED feature form, so the
+        # tail placement argmin sees the ~4x smaller hop for free
+        feats = self._run_encoders(st, m, dec.precision)
         gathered = self._gather(st, model_name, m, feats)
         if gathered is None:
             if A == self.local_name:
@@ -1976,7 +2092,8 @@ class EMSServeEngine:
 
         if A == local:
             # encoder at home; only the tail travels
-            enc_dur = (self._enc_duration(m, len(feats), self.glass)
+            enc_dur = (self._enc_duration(m, len(feats), self.glass,
+                                          dec.precision)
                        if feats else 0.0)
             start, t_enc_done = self.glass.occupy(enc_dur, now)
             # glass-computed features are already safe at home
@@ -2010,7 +2127,7 @@ class EMSServeEngine:
                     fallback=True,
                     detect_s=max(0.0, t_detect - t_enc_done),
                     decision=dec, outputs=outputs, enc_tier=local,
-                    tail_tier=local)
+                    tail_tier=local, precision=dec.precision)
             down = down_ch.send(out_b, t_tail_done)
             self._touch_consumed(st, model_name)
             versions = self._replica_versions[T]
@@ -2029,11 +2146,12 @@ class EMSServeEngine:
                 downlink_s=down.t_deliver - t_tail_done,
                 compute_s=enc_dur + tail_host.time("tail"),
                 decision=dec, outputs=outputs, enc_tier=local,
-                tail_tier=T)
+                tail_tier=T, precision=dec.precision)
 
         host = self.hosts[A]
         up = self.fabric.channel(local, A).send(payload_b, now)
-        enc_dur = self._enc_duration(m, len(feats), host) if feats else 0.0
+        enc_dur = (self._enc_duration(m, len(feats), host, dec.precision)
+                   if feats else 0.0)
         _s, t_enc_done = host.occupy(enc_dur, up.t_deliver)
 
         if T == local:
@@ -2061,7 +2179,7 @@ class EMSServeEngine:
                 downlink_s=down.t_deliver - t_enc_done,
                 compute_s=enc_dur + self.glass.time("tail"),
                 decision=dec, outputs=outputs, enc_tier=A,
-                tail_tier=local)
+                tail_tier=local, precision=dec.precision)
 
         # encoder on A, tail on another remote B: the feature hops
         # A->B on the direct link while the glasses warm B's replica
@@ -2105,7 +2223,8 @@ class EMSServeEngine:
             uplink_s=up.t_deliver - up.t_send,
             downlink_s=down.t_deliver - t_tail_done,
             compute_s=enc_dur + tail_host.time("tail"),
-            decision=dec, outputs=outputs, enc_tier=A, tail_tier=B)
+            decision=dec, outputs=outputs, enc_tier=A, tail_tier=B,
+            precision=dec.precision)
 
     # --------------------------------------------------------- episodes
 

@@ -155,9 +155,15 @@ class TransportChannel:
         if self.max_history is not None:
             del self.deliveries[:-self.max_history]
             if len(self._flights) > 4 * self.max_history:
+                # Only flights already settled by the current clock —
+                # delivered (t_deliver <= t) or cancelled — may be
+                # dropped from the cancel index. A long-queued flight
+                # whose t_deliver is still in the future must stay
+                # cancellable no matter how many sends pass it.
                 keep = {x.flight for x in self.deliveries}
                 self._flights = {f: x for f, x in self._flights.items()
-                                 if f in keep}
+                                 if f in keep
+                                 or (not x.cancelled and x.t_deliver > t)}
         return d
 
     def cancel(self, flight: int, t: Optional[float] = None) -> bool:

@@ -482,3 +482,73 @@ def test_streaming_trace_audits_like_the_inmemory_export(
     assert jsonl_to_chrome(p) == ref.tracer.to_chrome(stats)
     rep = audit_file(p)
     assert rep.ok, rep.violations
+
+
+# ======================================================================
+# regression tests: transport/metrics seams (PR 10 bugfix sweep)
+# ======================================================================
+
+def test_cancel_survives_history_pruning():
+    """A flight whose t_deliver is still in the future must stay
+    cancellable no matter how many receipts scroll past it.
+
+    Regression: ``send()`` used to prune ``_flights`` down to the
+    flights still present in the last ``max_history`` deliveries, so a
+    long-queued live flight silently vanished from the cancel index
+    under fleet-scale load and ``cancel()`` returned False.
+    """
+    from repro.core import BandwidthTrace
+    tr = BandwidthTrace.static(1e6)                 # 1 MB/s
+    ch = TransportChannel(tr, latency_s=0.0, overhead_bytes=0,
+                          max_history=4)
+    big = ch.send(int(1e7), 0.0)                    # 10 s on the wire
+    assert big.t_deliver >= 10.0
+    for i in range(100):                            # >> 4*max_history
+        ch.send(100, 0.001 * (i + 1))
+    # the big flight is still in the air at t=5 -> must cancel cleanly
+    assert ch.cancel(big.flight, 5.0) is True
+    assert big.cancelled
+    # settled flights DO get pruned once the clock passes them: the
+    # index stays bounded after everything has delivered
+    for i in range(100):
+        ch.send(100, 20.0 + 0.001 * i)
+    assert len(ch._flights) <= 4 * ch.max_history + 1
+
+
+def test_prometheus_collision_disambiguated():
+    """Distinct registry keys that sanitize to one Prometheus name
+    (``cache.hits`` vs ``cache_hits``) must export under distinct
+    names with exactly one ``# TYPE`` line each (duplicate TYPE lines
+    are invalid exposition and scrapers reject the whole page)."""
+    m = Metrics()
+    m.inc("cache.hits", 3)
+    m.inc("cache_hits", 5)
+    m.set_gauge("cache.hits", 7)                    # cross-kind collision
+    text = m.to_prometheus()
+    type_lines = [l for l in text.splitlines() if l.startswith("# TYPE")]
+    names = [l.split()[2] for l in type_lines]
+    assert len(names) == len(set(names)) == 3
+    assert "emsserve_cache_hits 3.0" in text
+    assert "emsserve_cache_hits_2 5.0" in text
+    assert "emsserve_cache_hits_3 7.0" in text
+    # deterministic: same registry exports byte-identically
+    assert m.to_prometheus() == text
+
+
+def test_sketch_boundary_value_keeps_error_bound():
+    """A value sitting exactly on a bucket boundary (v == gamma^i) must
+    keep the advertised |q̂ - q| <= rel_err*q bound.
+
+    Regression: float slop in ``log(v)/log_gamma`` pushed the ratio
+    just above the integer i, ``ceil`` landed the value in bucket i+1,
+    and the reported midpoint overshot the bound by one ulp-cascade.
+    gamma^16 at rel_err=0.01 is such a value on this float stack.
+    """
+    s = QuantileSketch(rel_err=0.01)
+    v = s._gamma ** 16
+    s.add(v)
+    s.add(10.0 * v)                   # keep min/max clamp from saving us
+    got = s.quantile(0.0)
+    assert abs(got - v) <= s.rel_err * v
+    # structural pin: the boundary value sits in bucket i, not i+1
+    assert s._buckets.get(16) == 1

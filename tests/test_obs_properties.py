@@ -99,3 +99,18 @@ def test_byte_conservation_under_random_cancel_schedules(schedule):
     assert delivered_b + s["cancelled_bytes"] == s["bytes"]
     assert delivered_m + s["cancelled_msgs"] == s["msgs"]
     assert rep.checks["flights"] == len(schedule)
+
+
+@settings(**SETTINGS)
+@given(i=st.integers(min_value=-200, max_value=400),
+       rel_err=st.sampled_from([0.005, 0.01, 0.02, 0.05]))
+def test_boundary_values_land_in_their_own_bucket(i, rel_err):
+    """v = gamma^i is the TOP of bucket i — float slop in the log-ratio
+    must never push it into bucket i+1 (regression: off-by-one broke
+    the rel_err bound exactly at bucket boundaries)."""
+    sk = QuantileSketch(rel_err=rel_err)
+    v = sk._gamma ** i
+    if not (v >= 1e-12 and math.isfinite(v)):
+        return
+    sk.add(v)
+    assert sk._buckets == {i: 1}
